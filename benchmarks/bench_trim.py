@@ -1,0 +1,134 @@
+"""Paper-table benchmarks for the trimming algorithms.
+
+  table6  — graph characteristics (n, m, Deg_in/out, α, %trim)
+  table7  — waiting-set bound |Qp| (16 workers) for AC4/AC6
+  table8  — max traversed edges per worker, workers ∈ {1..32}, + the
+            paper's headline ratios (AC3/AC6, AC4/AC6 @ 16 workers)
+  table9  — real running time per method (single core; method ratios are
+            the physically measurable analogue of the paper's Table 9)
+  stability — repeatability of edges/time over repeats (paper Fig. 6)
+  scaling — edge-sampling sweep 10..100% (paper Figs. 7-9)
+"""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+from repro.core import CSRGraph, peeling_alpha, trim
+from .common import GRAPHS, METHODS, emit, get_graph, timeit
+
+WORKER_SWEEP = (1, 2, 4, 8, 16, 32)
+
+
+def table6():
+    for name in GRAPHS:
+        g = get_graph(name)
+        deg_out = np.asarray(g.out_degrees())
+        gt = g.transpose()
+        deg_in = np.asarray(gt.out_degrees())
+        res = trim(g, method="ac6")
+        alpha = peeling_alpha(g)
+        emit(f"table6.{name}", 0.0,
+             f"n={g.n};m={g.m};deg_in={deg_in.max()};"
+             f"deg_out={deg_out.max()};alpha={alpha};"
+             f"trim_pct={res.trimmed_fraction*100:.2f}")
+
+
+def table7():
+    for name in GRAPHS:
+        g = get_graph(name)
+        gt = g.transpose()
+        for method in ("ac4", "ac6"):
+            res = trim(g, method=method, workers=16, transpose=gt)
+            emit(f"table7.{name}.{method}", 0.0,
+                 f"max_qp={res.max_frontier}")
+
+
+def table8():
+    for name in GRAPHS:
+        g = get_graph(name)
+        gt = g.transpose()
+        per_method = {}
+        for method in METHODS:
+            kw = dict(transpose=gt) if method.startswith("ac4") else {}
+            maxes = {}
+            for p in WORKER_SWEEP:
+                res = trim(g, method=method, workers=p, **kw)
+                maxes[p] = int(res.per_worker_edges.max())
+                emit(f"table8.{name}.{method}.w{p}", 0.0,
+                     f"max_edges_per_worker={maxes[p]};"
+                     f"total={res.edges_traversed}")
+            per_method[method] = maxes
+        r36 = per_method["ac3"][16] / max(per_method["ac6"][16], 1)
+        r46 = per_method["ac4"][16] / max(per_method["ac6"][16], 1)
+        emit(f"table8.{name}.ratios", 0.0,
+             f"ac3_over_ac6_w16={r36:.2f};ac4_over_ac6_w16={r46:.2f}")
+
+
+def table9():
+    for name in GRAPHS:
+        g = get_graph(name)
+        gt = g.transpose() if name else None
+        times = {}
+        for method in METHODS:
+            kw = dict(transpose=gt) if method.startswith("ac4") else {}
+            med, std = timeit(lambda m=method, k=kw:
+                              trim(g, method=m, workers=16, **k))
+            times[method] = med
+            emit(f"table9.{name}.{method}", med * 1e6,
+                 f"std_us={std*1e6:.0f}")
+        emit(f"table9.{name}.speedup_ac6", 0.0,
+             f"vs_ac3={times['ac3']/times['ac6']:.2f};"
+             f"vs_ac4={times['ac4']/times['ac6']:.2f}")
+
+
+def stability(repeats: int = 10):
+    name = "sink_heavy"
+    g = get_graph(name)
+    for method in ("ac3", "ac4", "ac6"):
+        edges, times = [], []
+        gt = g.transpose() if method.startswith("ac4") else None
+        kw = dict(transpose=gt) if gt is not None else {}
+        for _ in range(repeats):
+            import time as _t
+            t0 = _t.perf_counter()
+            res = trim(g, method=method, workers=16, **kw)
+            times.append(_t.perf_counter() - t0)
+            edges.append(res.edges_traversed)
+        emit(f"stability.{name}.{method}", float(np.median(times)) * 1e6,
+             f"edges_unique={len(set(edges))};"
+             f"time_cv={np.std(times)/np.mean(times):.3f}")
+
+
+def scaling():
+    name = "sink_heavy"
+    g = get_graph(name)
+    ip, ix = g.to_numpy()
+    src = np.repeat(np.arange(g.n), np.diff(ip))
+    rng = np.random.default_rng(0)
+    for pct in (10, 40, 70, 100):
+        keep = rng.random(g.m) < pct / 100.0
+        gs = CSRGraph.from_edges(g.n, src[keep], ix[keep])
+        gst = gs.transpose()
+        for method in ("ac3", "ac4", "ac6"):
+            kw = dict(transpose=gst) if method.startswith("ac4") else {}
+            res = trim(gs, method=method, workers=16, **kw)
+            med, _ = timeit(lambda: trim(gs, method=method, workers=16,
+                                         **kw), repeats=2)
+            emit(f"scaling.{name}.{method}.e{pct}", med * 1e6,
+                 f"trim_pct={res.trimmed_fraction*100:.1f};"
+                 f"max_edges_pw={int(res.per_worker_edges.max())}")
+
+
+def main():
+    table6()
+    table7()
+    table8()
+    table9()
+    stability()
+    scaling()
+
+
+if __name__ == "__main__":
+    main()

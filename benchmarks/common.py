@@ -1,0 +1,52 @@
+"""Shared benchmark machinery: graph cache, timing, CSV emission.
+
+Output contract (run.py): one CSV line per measurement,
+    name,us_per_call,derived
+Hardware note: this container exposes ONE physical core, so wall-clock
+"speedup vs workers" is not physically measurable; the paper's primary
+metric — deterministic traversed-edge counts per worker — is exact, and
+method-vs-method wall-time ratios on one core are real measurements.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core import CSRGraph, trim
+from repro.graphs import generators
+
+_CACHE: dict[str, CSRGraph] = {}
+
+# benchmark graph set: every synthetic family from the paper §9.1 plus the
+# structural analogues of its other categories (DESIGN.md §7)
+GRAPHS = ("ER", "BA", "RMAT", "chain", "layered", "sink_heavy")
+METHODS = ("ac3", "ac4", "ac4*", "ac6")
+
+
+def get_graph(name: str) -> CSRGraph:
+    if name not in _CACHE:
+        t0 = time.time()
+        _CACHE[name] = generators.make(name)
+        print(f"# built {name} in {time.time()-t0:.1f}s "
+              f"(n={_CACHE[name].n:,} m={_CACHE[name].m:,})",
+              file=sys.stderr)
+    return _CACHE[name]
+
+
+def timeit(fn, repeats: int = 3, warmup: int = 1):
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)), float(np.std(ts))
+
+
+def emit(name: str, us_per_call: float, derived=""):
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,186 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimbing driver: hypothesis → change → re-lower → record.
+
+Each experiment lowers a cell twice (baseline flags vs. optimized flags)
+on the production mesh and records the roofline-term deltas to
+results/perf.jsonl.  Run:
+
+    PYTHONPATH=src python -m benchmarks.hillclimb --exp all
+"""
+import argparse
+import json
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.launch import perf_flags
+from repro.launch.dryrun import run_cell, collective_bytes
+from repro.launch.mesh import make_production_mesh
+
+
+def record(out, name, variant, rec):
+    entry = {"experiment": name, "variant": variant, **{
+        k: rec[k] for k in ("arch", "shape", "mesh", "status") if k in rec}}
+    if rec.get("status") == "ok":
+        entry["roofline"] = rec["roofline"]
+        entry["per_device"] = {k: rec["per_device"][k] for k in
+                               ("hlo_flops", "hlo_bytes",
+                                "collective_bytes", "peak_hbm_est")}
+        entry["useful_flops_ratio"] = rec["useful_flops_ratio"]
+    out.write(json.dumps(entry) + "\n")
+    out.flush()
+
+
+def exp_lm_attention(out):
+    """Hypothesis: the lowering stand-in's f32 score/mask materialization
+    inflates the memory term ~2.3x vs the Pallas kernel's HBM profile;
+    bf16 scores + additive mask should cut the per-layer byte slope
+    roughly in half."""
+    perf_flags.reset()
+    rec = run_cell("qwen3-1.7b", "train_4k", multi_pod=False)
+    record(out, "lm_attention_traffic", "baseline_f32_select", rec)
+    perf_flags.FLAGS.attn_bf16_scores = True
+    perf_flags.FLAGS.attn_additive_mask = True
+    rec = run_cell("qwen3-1.7b", "train_4k", multi_pod=False)
+    record(out, "lm_attention_traffic", "bf16_scores+additive_mask", rec)
+    perf_flags.reset()
+
+
+def exp_recsys_optimizer(out):
+    """Hypothesis: dense AdamW over 2.5B embedding rows dominates the
+    train_batch cell (flops AND bytes); momentum-free table updates
+    (HybridAdamW) should cut both by ~3x and the optimizer state by 3x."""
+    perf_flags.reset()
+    rec = run_cell("wide-deep", "train_batch", multi_pod=False)
+    record(out, "recsys_optimizer", "dense_adamw", rec)
+    perf_flags.FLAGS.recsys_hybrid_opt = True
+    rec = run_cell("wide-deep", "train_batch", multi_pod=False)
+    record(out, "recsys_optimizer", "hybrid_sgd_tables", rec)
+    perf_flags.reset()
+
+
+def exp_moe_decode(out):
+    """Hypothesis: the dropless capacity floor (8) makes batch-128 top-2
+    decode compute 128·8 expert slots for 256 routed tokens (4x waste);
+    floor 2 keeps statistical capacity and should cut MoE GEMM flops
+    ~4x at decode shapes."""
+    perf_flags.reset()
+    rec = run_cell("arctic-480b", "decode_32k", multi_pod=False)
+    record(out, "moe_decode_capacity", "floor8", rec)
+    perf_flags.FLAGS.moe_decode_capacity_floor = 2
+    rec = run_cell("arctic-480b", "decode_32k", multi_pod=False)
+    record(out, "moe_decode_capacity", "floor2", rec)
+    perf_flags.reset()
+
+
+def exp_trim_packed(out):
+    """Hypothesis (paper's own technique): packing the per-round status
+    all_gather into a uint32 bitmap cuts distributed-trim collective
+    traffic 8x (bool = 1 byte/vertex -> 1 bit/vertex)."""
+    from repro.core.distributed import (_ac6_body, _ac6_body_packed)
+    mesh = make_production_mesh(multi_pod=True)
+    axis = ("pod", "data", "model")
+    n, m = 64_000_000, 512_000_000
+    nl = -(-(n // 512) // 32) * 32     # 32-aligned for the packed bitmap
+    ml = 2 * (m // 512)
+    lip = jax.ShapeDtypeStruct((512, nl + 1), jax.numpy.int32)
+    lix = jax.ShapeDtypeStruct((512, ml), jax.numpy.int32)
+    for variant, body_fn in (("baseline_bool", _ac6_body),
+                             ("packed_bitmap", _ac6_body_packed)):
+        body = body_fn(axis)
+        compiled = jax.jit(jax.shard_map(
+            body, mesh=mesh, in_specs=(P(axis), P(axis)),
+            out_specs=(P(axis),) * 4)).lower(lip, lix).compile()
+        coll = collective_bytes(compiled.as_text())
+        entry = {"experiment": "trim_status_packing", "variant": variant,
+                 "arch": "distributed-trim-ac6", "shape": "n64M_m512M",
+                 "mesh": "multi_pod_2x16x16", "status": "ok",
+                 "collective_bytes_per_round_per_dev": coll["total"],
+                 "by_kind": coll["bytes_by_kind"]}
+        out.write(json.dumps(entry) + "\n")
+        out.flush()
+        print(f"[trim_status_packing/{variant}] collective bytes/round/dev "
+              f"= {coll['total']:.3e}")
+
+
+def exp_gnn_edge_sharding(out):
+    """Hypothesis: gathered edge tensors (62M edges × 49 SH × 128 ch on
+    ogb_products) lose their sharding through XLA propagation and get
+    replicated — explaining the 5.4 TB/device peak-HBM estimate.  Pinning
+    edge-space tensors to the data axes should cut the memory term and
+    peak HBM by ~O(data-axis size)."""
+    perf_flags.reset()
+    rec = run_cell("equiformer-v2", "ogb_products", multi_pod=False)
+    record(out, "gnn_edge_sharding", "baseline_unpinned", rec)
+    perf_flags.FLAGS.gnn_edge_dp = ("data", "model")
+    rec = run_cell("equiformer-v2", "ogb_products", multi_pod=False)
+    record(out, "gnn_edge_sharding", "edge_dp_data_model_256way", rec)
+    perf_flags.reset()
+
+
+def exp_llama4_decode(out):
+    """Hypothesis: llama4 decode_32k's collective term (1.58 s) is MoE
+    dispatch traffic amplified by the dropless capacity floor (8 slots x
+    128 experts for 128 routed tokens); floor 2 should cut expert-GEMM
+    flops AND the dispatch collectives ~4x."""
+    perf_flags.reset()
+    rec = run_cell("llama4-maverick-400b-a17b", "decode_32k",
+                   multi_pod=False)
+    record(out, "llama4_decode", "floor8", rec)
+    perf_flags.FLAGS.moe_decode_capacity_floor = 2
+    rec = run_cell("llama4-maverick-400b-a17b", "decode_32k",
+                   multi_pod=False)
+    record(out, "llama4_decode", "floor2", rec)
+    # iteration 2 (after the floor-2 refutation on collectives): the
+    # all-gathers are FSDP *weight* gathers, not MoE dispatch -> serve
+    # with bf16 parameters (inference-standard) to halve them
+    perf_flags.FLAGS.serve_bf16_params = True
+    rec = run_cell("llama4-maverick-400b-a17b", "decode_32k",
+                   multi_pod=False)
+    record(out, "llama4_decode", "floor2+bf16_params", rec)
+    perf_flags.reset()
+
+
+def exp_llama4_decode_iter3(out):
+    """Iteration 3 (after profiling): the 6 GiB/layer all-gathers are the
+    KV CACHE being re-gathered because chunked-local layers dynamic-slice
+    an 8k window out of a seq-sharded cache.  Head-sharding the cache for
+    chunked archs keeps the window slice local."""
+    perf_flags.reset()
+    rec = run_cell("llama4-maverick-400b-a17b", "decode_32k",
+                   multi_pod=False)
+    record(out, "llama4_decode", "dh_sharded_cache+bf16_attend", rec)
+
+
+EXPERIMENTS = {
+    "gnn_edge_sharding": exp_gnn_edge_sharding,
+    "llama4_decode": exp_llama4_decode,
+    "lm_attention": exp_lm_attention,
+    "recsys_optimizer": exp_recsys_optimizer,
+    "moe_decode": exp_moe_decode,
+    "trim_packed": exp_trim_packed,
+    "llama4_decode_iter3": exp_llama4_decode_iter3,
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--exp", default="all",
+                    choices=list(EXPERIMENTS) + ["all"])
+    ap.add_argument("--out", default="results/perf.jsonl")
+    args = ap.parse_args()
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "a") as out:
+        todo = list(EXPERIMENTS) if args.exp == "all" else [args.exp]
+        for name in todo:
+            print(f"=== experiment: {name} ===")
+            EXPERIMENTS[name](out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Render the §Dry-run / §Roofline tables from results/dryrun.jsonl.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--jsonl results/dryrun.jsonl]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load(path):
+    recs = {}
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            recs[(r["arch"], r["shape"], r["mesh"])] = r  # last write wins
+    return recs
+
+
+def fmt_term(s):
+    return f"{s*1e3:.2f}" if s < 10 else f"{s:.2f}s"
+
+
+def render(recs, mesh_filter="single_pod_16x16"):
+    rows = []
+    for (arch, shape, mesh), r in sorted(recs.items()):
+        if mesh != mesh_filter:
+            continue
+        if r["status"] == "skipped":
+            rows.append(f"| {arch} | {shape} | — | — | — | — | skipped: "
+                        f"{r['skip_reason'][:60]}… |")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {arch} | {shape} | ERROR | | | | "
+                        f"{r.get('error','')[:60]} |")
+            continue
+        rl = r["roofline"]
+        rows.append(
+            f"| {arch} | {shape} | {fmt_term(rl['compute_s'])} | "
+            f"{fmt_term(rl['memory_s'])} | {fmt_term(rl['collective_s'])} | "
+            f"**{rl['dominant']}** | useful={r['useful_flops_ratio']*100:.0f}% "
+            f"hbm={r['per_device']['peak_hbm_est']/2**30:.1f}GiB |")
+    header = ("| arch | shape | compute (ms) | memory (ms) | collective "
+              "(ms) | bottleneck | notes |\n|---|---|---|---|---|---|---|")
+    return header + "\n" + "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jsonl", default="results/dryrun.jsonl")
+    ap.add_argument("--mesh", default="single_pod_16x16")
+    args = ap.parse_args()
+    recs = load(args.jsonl)
+    print(render(recs, args.mesh))
+    ok = sum(1 for r in recs.values() if r["status"] == "ok")
+    sk = sum(1 for r in recs.values() if r["status"] == "skipped")
+    er = sum(1 for r in recs.values() if r["status"] == "error")
+    print(f"\n<!-- {ok} ok, {sk} skipped, {er} error -->", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

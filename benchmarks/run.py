@@ -1,0 +1,36 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Prints ``name,us_per_call,derived`` CSV (stdout); progress on stderr.
+The roofline tables come from the dry-run artifact instead
+(``python -m benchmarks.roofline``) since they require 512 virtual devices.
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small graphs only (CI mode)")
+    args, _ = ap.parse_known_args()
+
+    from . import bench_trim, common
+    if args.quick:
+        bench_trim.GRAPHS = common.GRAPHS = ("chain", "BA")
+        bench_trim.WORKER_SWEEP = (1, 16)
+
+    print("name,us_per_call,derived")
+    bench_trim.table6()
+    bench_trim.table7()
+    bench_trim.table8()
+    bench_trim.table9()
+    bench_trim.stability(repeats=5 if args.quick else 10)
+    bench_trim.scaling()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Quickstart: trim one graph with all three arc-consistency algorithms.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Demonstrates the paper's headline result: all three methods reach the same
+fixpoint, but AC-6 traverses a fraction of the edges (Theorem 12: ≤ m).
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core import CSRGraph, complete, peeling_alpha, sound, trim
+from repro.graphs import sink_heavy
+
+g = sink_heavy(n=200_000, m=800_000, sink_frac=0.8, seed=0)
+print(f"graph: n={g.n:,} m={g.m:,} α={peeling_alpha(g)}")
+
+results = {}
+for method in ("ac3", "ac4", "ac4*", "ac6"):
+    res = trim(g, method=method, workers=16)
+    results[method] = res
+    ip, ix = g.to_numpy()
+    assert sound(ip, ix, res.status) and complete(ip, ix, res.status)
+    print(f"{method:5s}: trimmed {res.n_trimmed:,} "
+          f"({res.trimmed_fraction*100:.1f}%) | edges traversed "
+          f"{res.edges_traversed:,} | rounds {res.rounds} | "
+          f"max|Qp| {res.max_frontier}")
+
+assert all((r.status == results["ac6"].status).all()
+           for r in results.values()), "all methods reach the same fixpoint"
+r = results
+print(f"\nAC-6 traverses {r['ac3'].edges_traversed/r['ac6'].edges_traversed:.1f}x "
+      f"fewer edges than AC-3 and "
+      f"{r['ac4'].edges_traversed/r['ac6'].edges_traversed:.1f}x fewer than "
+      f"AC-4 — the paper's §9.3 result.")

@@ -1,0 +1,44 @@
+"""End-to-end driver: SCC decomposition with graph trimming (paper §1.1).
+
+    PYTHONPATH=src python examples/scc_decomposition.py
+
+Reproduces the paper's Figure-1 scenario — two large SCCs connected by
+chains of trivial SCCs — then scales to a random digraph, showing how much
+of the work trimming removes before any FW-BW pivot search runs.
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core import CSRGraph
+from repro.core.scc import same_partition, scc_decompose, tarjan_oracle
+
+# --- paper Figure 1 analogue ------------------------------------------------
+# SCC1 = {0,1,2}, SCC2 = {3,4,5}, trimmable chain 9->8->7->6->SCC2
+edges = [(0, 1), (1, 2), (2, 0),
+         (3, 4), (4, 5), (5, 3),
+         (6, 3), (7, 6), (8, 7), (9, 8),
+         (2, 3)]                      # bridge between the big SCCs
+g = CSRGraph.from_edges(10, *map(np.array, zip(*edges)))
+labels, stats = scc_decompose(g, use_trim=True, trim_method="ac6")
+oracle = tarjan_oracle(*g.to_numpy())
+assert same_partition(labels, oracle)
+print("figure-1 graph:", stats)
+
+# --- larger random digraph ----------------------------------------------------
+rng = np.random.default_rng(0)
+n, m = 20_000, 60_000
+g = CSRGraph.from_edges(n, rng.integers(0, n, m), rng.integers(0, n, m))
+for use_trim in (True, False):
+    labels, stats = scc_decompose(g, use_trim=use_trim, trim_method="ac6")
+    n_sccs = len(np.unique(labels))
+    print(f"use_trim={use_trim}: {n_sccs:,} SCCs, pivots={stats['pivots']}, "
+          f"trimmed={stats['trimmed_total']:,}, "
+          f"trim_edges={stats['trim_edges_traversed']:,}")
+
+oracle = tarjan_oracle(*g.to_numpy())
+assert same_partition(labels, oracle)
+print("matches Tarjan oracle — trimming removed the trivial-SCC work "
+      "before any BFS pivot ran.")

@@ -1,0 +1,62 @@
+"""End-to-end training driver: SchNet energy model, a few hundred steps,
+with checkpoint/restart — plus the paper's technique wired into the data
+layer (trim-filtered neighbor sampling).
+
+    PYTHONPATH=src python examples/train_gnn_trimmed.py
+"""
+import sys
+import tempfile
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get
+from repro.data import GraphBatchStream
+from repro.graphs import NeighborSampler, sink_heavy
+from repro.models.gnn import SchNet
+from repro.optim import AdamW
+from repro.train import Trainer, TrainerConfig
+
+# 1) the paper's technique in the data path: sample only from the trimmed
+#    (arc-consistent) universe — no dead-end neighbors
+g = sink_heavy(50_000, 200_000, sink_frac=0.7, seed=0)
+sampler = NeighborSampler(g, fanouts=(8, 4), seed=0, trim=True)
+print(f"sampling universe: {g.n:,} vertices, trimmed "
+      f"{sampler.trim_stats['trimmed']:,} sinks first "
+      f"(AC-6 traversed {sampler.trim_stats['edges_traversed']:,} edges)")
+blocks = sampler.sample(next(sampler.batches(64, 1)))
+print(f"sampled blocks: {[b.neighbors.shape for b in blocks]}")
+
+# 2) train a SchNet on synthetic molecular batches for 300 steps
+cfg = get("schnet").make_reduced()
+model = SchNet(cfg)
+params = model.init(jax.random.PRNGKey(0))
+opt = AdamW(lr=2e-3)
+stream = GraphBatchStream(batch=8, n_nodes=16, n_edges=48, seed=0)
+
+
+def loss_fn(params, batch):
+    def single(b):
+        return jnp.sum(model.forward(params, b)[..., 0])
+    e = jax.vmap(single)({k: v for k, v in batch.items() if k != "energy"})
+    return jnp.mean(jnp.square(e - batch["energy"]))
+
+
+def step(params, opt_state, batch):
+    loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+    p, s = opt.update(grads, opt_state, params)
+    return p, s, {"loss": loss}
+
+
+with tempfile.TemporaryDirectory() as ckpt_dir:
+    tr = Trainer(step, params, opt.init(params), stream,
+                 TrainerConfig(num_steps=300, ckpt_dir=ckpt_dir,
+                               ckpt_every=100, log_every=50),
+                 put_batch=lambda b: jax.tree.map(jnp.asarray, b))
+    hist = tr.run()
+    first, last = hist[0]["loss"], hist[-1]["loss"]
+    print(f"trained 300 steps: loss {first:.4f} -> {last:.4f}")
+    assert last < first

@@ -1,0 +1,12 @@
+"""Core library: parallel graph trimming by arc-consistency (the paper's
+contribution), plus its flagship application (SCC decomposition).
+"""
+from .graph import CSRGraph, TrimResult, worker_of
+from .ref import complete, peeling_alpha as peeling_alpha_oracle, sound, trim_oracle
+from .trim import METHODS, peeling_alpha, trim
+
+__all__ = [
+    "CSRGraph", "TrimResult", "worker_of", "trim", "METHODS",
+    "trim_oracle", "sound", "complete", "peeling_alpha",
+    "peeling_alpha_oracle",
+]

@@ -1,0 +1,81 @@
+"""AC-6-based graph trimming (paper Algorithm 7/8) — the paper's novel
+contribution — in BSP formulation.
+
+Each vertex v keeps ONE support: the adjacency position ``ptr[v]`` of a live
+successor.  When the support dies, v scans strictly *after* its pointer for
+a replacement (``DoPost``, paper Alg. 7 lines 9-12); failure kills v and the
+death propagates.  Pointers never retreat, so every adjacency entry is
+examined at most once — total edge traversals ≤ m (paper Theorem 12), the
+property that makes AC-6 the right algorithm for implicit/on-the-fly graphs.
+
+TPU adaptation of the supporting sets (paper Definition 3): instead of
+mutating per-vertex sets v.S under locks, we store only the forward choice
+``support(v) = indices[indptr[v] + ptr[v]]`` and *lazily invert* it each
+round with one dense gather::
+
+    affected = live(v)  &  ¬status[support(v)]
+
+This is race-free by construction (BSP snapshot), needs O(n) space like the
+paper's S-sets, and preserves the ≤ m traversal bound.  The trade is an
+O(n) vectorized mask per round instead of O(|S(w)|) pointer chasing — the
+depth/work trade documented in DESIGN.md §2.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .common import per_worker_add, probe_first_live, worker_counts
+
+
+@partial(jax.jit, static_argnames=("workers",))
+def ac6_kernel(indptr, indices, worker_ids, workers: int, active=None):
+    """``active``: optional (n,) bool — trim the induced subgraph (vertices
+    outside are treated as already DEAD).  Used by the SCC application."""
+    n = indptr.shape[0] - 1
+    m = indices.shape[0]
+    deg = indptr[1:] - indptr[:-1]
+    if active is None:
+        active = jnp.ones((n,), bool)
+
+    def support_of(ptr):
+        addr = jnp.clip(indptr[:-1] + ptr, 0, max(m - 1, 0))
+        return indices[addr]
+
+    def cond(state):
+        return jnp.any(state["affected"])
+
+    def body(state):
+        status, affected = state["status"], state["affected"]
+        # scan strictly after the (dead) support; round 0 starts at 0 (ptr=-1)
+        found, pos, probes = probe_first_live(
+            status, indptr, indices, state["ptr"] + 1, scanning=affected)
+        frontier = affected & ~found           # newly dead this round
+        new_status = status & ~frontier
+        ptr = jnp.where(affected, jnp.where(found, pos, deg), state["ptr"])
+        # lazy supporting-set inversion: whose support died?
+        supp_live = new_status[support_of(ptr)]
+        next_affected = new_status & ~supp_live & (deg > 0)
+        pw = per_worker_add(state["per_worker"], probes, worker_ids, workers)
+        fsz = worker_counts(frontier, worker_ids, workers)
+        return dict(
+            status=new_status,
+            ptr=ptr,
+            affected=next_affected,
+            rounds=state["rounds"] + 1,
+            per_worker=pw,
+            max_qp=jnp.maximum(state["max_qp"], jnp.max(fsz)),
+        )
+
+    init = dict(
+        status=active,
+        ptr=jnp.full((n,), -1, jnp.int32),
+        affected=active,
+        rounds=jnp.array(0, jnp.int32),
+        per_worker=jnp.zeros((workers,), jnp.int32),
+        max_qp=jnp.array(0, jnp.int32),
+    )
+    out = jax.lax.while_loop(cond, body, init)
+    return out["status"], out["rounds"], out["per_worker"], out["max_qp"]

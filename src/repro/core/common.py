@@ -1,0 +1,139 @@
+"""Shared machinery for the BSP (bulk-synchronous) trimming algorithms.
+
+The paper's multicore algorithms advance per-vertex *scan pointers*
+(``edge_index``, paper §8 "Traverse Edges") so that the adjacency list of a
+vertex is never re-scanned from the beginning.  On TPU we keep the pointer
+array and advance *all* unresolved vertices in lockstep micro-steps inside a
+``lax.while_loop``; each micro-step is one dense gather (one "probe") per
+scanning vertex.  This preserves the paper's traversal bounds:
+
+* AC-3: each live vertex re-probes from its pointer every peeling round
+  (work O(α(n+m))), pointer skips the known-dead prefix.
+* AC-6: a vertex probes only when its single support died; the pointer
+  strictly advances past dead targets, so every adjacency entry is examined
+  at most once (work O(n+m), the paper's Theorem 12).
+
+Counters (traversed edges, per-worker attribution, frontier sizes) are
+carried inside the loop state so benchmarks read exact, deterministic values
+— the paper's primary experimental metric (§9.3).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def probe_first_live(status, indptr, indices, start, scanning):
+    """Advance scan pointers until a live target is found or the list ends.
+
+    Args:
+      status:   (n,) bool — snapshot of liveness for this round. Probes read
+                this snapshot only (BSP: no intra-round races by construction).
+      indptr:   (n+1,) int32 CSR row pointers.
+      indices:  (m,) int32 CSR adjacency.
+      start:    (n,) int32 — relative scan position to probe first.
+      scanning: (n,) bool — which vertices participate.
+
+    Returns:
+      found:  (n,) bool — a live target exists at position >= start.
+      pos:    (n,) int32 — relative position of the found live target
+              (undefined where not found).
+      probes: (n,) int32 — number of adjacency entries examined ("traversed
+              edges", paper §9.3). Zero for non-scanning vertices.
+    """
+    n = indptr.shape[0] - 1
+    m = indices.shape[0]
+    deg = indptr[1:] - indptr[:-1]
+    start = jnp.minimum(start, deg)
+
+    def cond(state):
+        ptr, active, found = state
+        return jnp.any(active)
+
+    def body(state):
+        ptr, active, found = state
+        in_range = ptr < deg
+        addr = jnp.clip(indptr[:-1] + ptr, 0, max(m - 1, 0))
+        target = indices[addr]
+        hit = active & in_range & status[target]
+        # live target found: stop, keep ptr at the hit position
+        found = found | hit
+        # dead target: advance; exhausted: deactivate
+        advance = active & in_range & ~hit
+        ptr = jnp.where(advance, ptr + 1, ptr)
+        active = active & ~hit & (ptr < deg)
+        return ptr, active, found
+
+    ptr0 = jnp.where(scanning, start, deg)
+    active0 = scanning & (ptr0 < deg)
+    # derive found0 from `scanning` (not a fresh constant) so its varying-axis
+    # type matches the loop body's output under shard_map
+    found0 = jnp.logical_and(scanning, False)
+    ptr, _, found = jax.lax.while_loop(cond, body, (ptr0, active0, found0))
+    # entries examined: positions start..ptr inclusive when found,
+    # start..deg-1 when exhausted  ->  (ptr - start) + found
+    probes = jnp.where(scanning, ptr - start + found.astype(jnp.int32), 0)
+    return found, ptr, probes
+
+
+def probe_first_live_windowed(status, indptr, indices, start, scanning,
+                              window: int = 16, use_kernel: bool = True):
+    """Window-batched probe: materialize each scanning vertex's next
+    ``window`` adjacency entries, reduce them with the
+    ``kernels.first_live_scan`` Pallas kernel (block-level frontier skip on
+    TPU), and fall back to per-step probing only for vertices whose live
+    target lies beyond the window.  Identical results to
+    ``probe_first_live`` including the traversal counters.
+
+    This is the TPU-native execution path of the trimming hot loop: one
+    XLA gather builds the (n, W) liveness tile, the kernel fuses the row
+    scan (DESIGN.md §6).
+    """
+    from ..kernels import ops as kops
+
+    n = indptr.shape[0] - 1
+    m = indices.shape[0]
+    deg = indptr[1:] - indptr[:-1]
+    start = jnp.minimum(start, deg)
+
+    offs = jnp.arange(window, dtype=jnp.int32)
+    pos = start[:, None] + offs[None, :]                     # (n, W)
+    valid = pos < deg[:, None]
+    addr = jnp.clip(indptr[:-1, None] + pos, 0, max(m - 1, 0))
+    flags = status[indices[addr]]                            # (n, W)
+
+    first, found_w = kops.first_live_scan(flags, valid, scanning,
+                                          use_kernel=use_kernel)
+    pos_w = start + first
+    # exhausted within the window <=> no live found AND window covers deg
+    covered = (start + window) >= deg
+    resolved = found_w | covered
+    # window probes: min(first-live-or-window-end) entries examined
+    examined_w = jnp.where(
+        scanning,
+        jnp.where(found_w, first + 1,
+                  jnp.minimum(window, jnp.maximum(deg - start, 0))),
+        0)
+
+    # rare continuation: live target beyond the window
+    rest = scanning & ~resolved
+    found_r, pos_r, probes_r = probe_first_live(
+        status, indptr, indices, start + window, rest)
+
+    found = jnp.where(rest, found_r, found_w & scanning)
+    pos_out = jnp.where(rest, pos_r, pos_w)
+    probes = jnp.where(rest, examined_w + probes_r, examined_w)
+    return found, pos_out, probes
+
+
+def per_worker_add(acc, values, worker_ids, workers: int):
+    """acc[p] += sum of values over vertices owned by worker p."""
+    return acc + jax.ops.segment_sum(values.astype(jnp.int32), worker_ids,
+                                     num_segments=workers)
+
+
+def worker_counts(mask, worker_ids, workers: int):
+    return jax.ops.segment_sum(mask.astype(jnp.int32), worker_ids,
+                               num_segments=workers)

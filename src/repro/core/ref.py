@@ -1,0 +1,69 @@
+"""Pure-numpy oracle: naive peeling to the trimmed-graph fixpoint.
+
+Used by tests to check soundness (eq. 1) and completeness (eq. 2) of every
+algorithm/backend.  Intentionally the dumbest correct implementation.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def trim_oracle(indptr: np.ndarray, indices: np.ndarray) -> np.ndarray:
+    """Return the LIVE mask of the unique trimmed fixpoint (bool, (n,))."""
+    indptr = np.asarray(indptr)
+    indices = np.asarray(indices)
+    n = len(indptr) - 1
+    status = np.ones(n, dtype=bool)
+    src = np.repeat(np.arange(n), np.diff(indptr))
+    while True:
+        has_live_succ = np.zeros(n, dtype=bool)
+        if len(indices):
+            live_edge = status[indices]
+            np.logical_or.at(has_live_succ, src, live_edge)
+        new_status = status & has_live_succ
+        if (new_status == status).all():
+            return status
+        status = new_status
+
+
+def peeling_alpha(indptr: np.ndarray, indices: np.ndarray) -> int:
+    """Number of peeling steps α (paper Definition 2)."""
+    indptr = np.asarray(indptr)
+    indices = np.asarray(indices)
+    n = len(indptr) - 1
+    status = np.ones(n, dtype=bool)
+    src = np.repeat(np.arange(n), np.diff(indptr))
+    alpha = 0
+    while True:
+        has_live_succ = np.zeros(n, dtype=bool)
+        if len(indices):
+            np.logical_or.at(has_live_succ, src, status[indices])
+        new_status = status & has_live_succ
+        if (new_status == status).all():
+            return alpha
+        alpha += 1
+        status = new_status
+
+
+def sound(indptr, indices, status) -> bool:
+    """Paper eq. (1): every dead vertex has only dead successors."""
+    indptr, indices, status = map(np.asarray, (indptr, indices, status))
+    n = len(indptr) - 1
+    src = np.repeat(np.arange(n), np.diff(indptr))
+    has_live_succ = np.zeros(n, dtype=bool)
+    if len(indices):
+        np.logical_or.at(has_live_succ, src, status[indices].astype(bool))
+    dead = ~status.astype(bool)
+    return bool((~(dead & has_live_succ)).all())
+
+
+def complete(indptr, indices, status) -> bool:
+    """Paper eq. (2): every vertex with no live successor is dead."""
+    indptr, indices, status = map(np.asarray, (indptr, indices, status))
+    n = len(indptr) - 1
+    src = np.repeat(np.arange(n), np.diff(indptr))
+    has_live_succ = np.zeros(n, dtype=bool)
+    if len(indices):
+        np.logical_or.at(has_live_succ, src, status[indices].astype(bool))
+    live = status.astype(bool)
+    return bool((~(~has_live_succ & live)).all())

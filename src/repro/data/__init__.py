@@ -1,0 +1,3 @@
+from .pipeline import GraphBatchStream, RecsysStream, TokenStream
+
+__all__ = ["TokenStream", "RecsysStream", "GraphBatchStream"]

@@ -1,0 +1,135 @@
+"""Flash attention (streaming softmax) Pallas TPU kernel.
+
+Targets TPU v5e: the MXU consumes (block_q × d) @ (d × block_k) tiles from
+VMEM; running max / denominator live in VMEM scratch carried across the
+innermost ("arbitrary") grid axis.  Causal masking enables *block-level*
+skipping: fully-masked kv blocks are never computed (the same structural
+trick the trimming kernels use for frontier blocks).
+
+GQA is expressed through the kv BlockSpec index_map — q heads h map to kv
+head h // group_size — so kv is never materialized per-q-head.
+
+Validated in interpret mode against ``ref.attention_ref`` (pure jnp oracle).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scratch, l_scratch,
+                  acc_scratch, *, sm_scale: float, causal: bool,
+                  block_q: int, block_k: int, num_kv_blocks: int,
+                  q_offset: int):
+    """q_offset: absolute position of q row 0 (sk - sq: queries are aligned
+    to the end of the kv sequence — chunked-prefill / decode convention)."""
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scratch[...] = jnp.full_like(m_scratch, NEG_INF)
+        l_scratch[...] = jnp.zeros_like(l_scratch)
+        acc_scratch[...] = jnp.zeros_like(acc_scratch)
+
+    should_compute = True
+    if causal:
+        # block-level causal skip: skip kv blocks entirely above the diagonal
+        should_compute = (q_offset + qi * block_q + block_q - 1
+                          >= ki * block_k)
+
+    @pl.when(should_compute)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)           # (block_q, d)
+        k = k_ref[0].astype(jnp.float32)           # (block_k, d)
+        v = v_ref[0].astype(jnp.float32)           # (block_k, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * sm_scale
+        if causal:
+            q_pos = q_offset + qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            k_pos = ki * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+        m_prev = m_scratch[...]                     # (block_q, 1)
+        l_prev = l_scratch[...]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                      # (block_q, block_k)
+        corr = jnp.exp(m_prev - m_new)              # (block_q, 1)
+        l_new = l_prev * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_scratch[...] = acc_scratch[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scratch[...] = m_new
+        l_scratch[...] = l_new
+
+    @pl.when(ki == num_kv_blocks - 1)
+    def _finalize():
+        l = l_scratch[...]
+        l = jnp.where(l == 0.0, 1.0, l)             # fully-masked rows -> 0
+        o_ref[0] = (acc_scratch[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "sm_scale", "block_q", "block_k",
+                              "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    sm_scale: float | None = None,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    interpret: bool = True):
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D) with Hq % Hkv == 0.
+
+    Returns (B, Hq, Sq, D) in q.dtype.
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(d)
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, block_q, sk, block_k)
+    nq, nk = sq // block_q, sk // block_k
+
+    qf = q.reshape(b * hq, sq, d)
+    kf = k.reshape(b * hkv, sk, d)
+    vf = v.reshape(b * hkv, sk, d)
+
+    kernel = functools.partial(
+        _flash_kernel, sm_scale=sm_scale, causal=causal,
+        block_q=block_q, block_k=block_k, num_kv_blocks=nk,
+        q_offset=sk - sq)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_k, d),
+                         lambda bh, qi, ki, g=group: (bh // g, ki, 0)),
+            pl.BlockSpec((1, block_k, d),
+                         lambda bh, qi, ki, g=group: (bh // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running denominator
+            pltpu.VMEM((block_q, d), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, hq, sq, d)

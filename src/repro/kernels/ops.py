@@ -1,0 +1,59 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True when no TPU is attached (this container is
+CPU-only; TPU v5e is the lowering TARGET).  Model code calls these wrappers,
+never pallas_call directly; the dry-run lowers with ``interpret=False``
+disabled paths replaced by the jnp references so HLO stays analyzable.
+"""
+from __future__ import annotations
+
+import jax
+
+from . import ref
+from .first_live_scan import first_live_scan as _fls
+from .flash_attention import flash_attention as _fa
+from .segment_reduce import segment_sum_pallas as _ssp
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, sm_scale=None,
+                    use_kernel: bool | None = None, **kw):
+    """use_kernel=None: Pallas kernel on TPU; off-TPU the chunked jnp flash
+    twin (same math, streaming memory) so lowering/dry-run stays sane."""
+    if use_kernel is None:
+        use_kernel = on_tpu()
+    if use_kernel:
+        return _fa(q, k, v, causal=causal, sm_scale=sm_scale,
+                   interpret=not on_tpu(), **kw)
+    try:
+        from ..launch.perf_flags import FLAGS
+        import jax.numpy as jnp
+        kw.setdefault("score_dtype",
+                      jnp.bfloat16 if FLAGS.attn_bf16_scores else None)
+        kw.setdefault("additive_mask", FLAGS.attn_additive_mask)
+    except ImportError:
+        pass
+    return ref.attention_ref_chunked(q, k, v, causal=causal,
+                                     sm_scale=sm_scale, **kw)
+
+
+def segment_sum(values, seg_ids, num_segments: int,
+                use_kernel: bool | None = None, **kw):
+    if use_kernel is None:
+        use_kernel = on_tpu()
+    if use_kernel:
+        return _ssp(values, seg_ids, num_segments,
+                    interpret=not on_tpu(), **kw)
+    return ref.segment_sum_ref(values, seg_ids, num_segments)
+
+
+def first_live_scan(flags, valid, active, use_kernel: bool | None = None,
+                    **kw):
+    if use_kernel is None:
+        use_kernel = on_tpu()
+    if use_kernel:
+        return _fls(flags, valid, active, interpret=not on_tpu(), **kw)
+    return ref.first_live_ref(flags, valid, active)

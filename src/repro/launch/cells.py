@@ -1,0 +1,337 @@
+"""(architecture × shape × mesh) → lowered-step builder.
+
+``build_cell`` returns everything the dry-run needs: the jit-able step
+function, abstract (ShapeDtypeStruct) arguments, in/out shardings, and the
+MODEL_FLOPS accounting for §Roofline's useful-compute ratio.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from .. import configs
+from ..models.gnn import (MACE, EquiformerV2, MeshGraphNet, SchNet)
+from ..models.recsys import WideDeep, make_recsys_train_step
+from ..models.transformer import LM, MeshAxes, make_train_step
+from ..optim import AdamW
+from .mesh import data_axes
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass
+class CellBuild:
+    fn: Callable
+    abstract_args: tuple
+    in_shardings: Any
+    out_shardings: Any
+    model_flops: float
+    notes: str = ""
+    donate_argnums: tuple = ()
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _replicated_specs(abstract_tree):
+    return jax.tree.map(lambda leaf: P(), abstract_tree)
+
+
+def build_cell(arch_id: str, shape_name: str, mesh,
+               multi_pod: bool, n_layers: int | None = None,
+               scan_unroll: bool = False) -> CellBuild:
+    """``n_layers``/``scan_unroll`` (LM only): layer-count override with an
+    unrolled layer loop — used by the dry-run's scan-cost extrapolation
+    (XLA cost_analysis counts a scan body once, so costs are measured
+    UNROLLED at 1 and 2 layer-groups and extrapolated linearly to the full
+    depth; see dryrun._lm_cost_extrapolated)."""
+    spec = configs.get(arch_id)
+    cell = spec.shapes[shape_name]
+    if cell.skip:
+        raise ValueError(f"cell {arch_id}×{shape_name} is skipped: "
+                         f"{cell.skip}")
+    dp = data_axes(multi_pod)
+    if spec.family == "lm":
+        return _build_lm(spec, cell, mesh, dp, n_layers=n_layers,
+                         scan_unroll=scan_unroll)
+    if spec.family == "gnn":
+        return _build_gnn(spec, cell, mesh, dp)
+    return _build_recsys(spec, cell, mesh, dp)
+
+
+# ------------------------------------------------------------------- LM
+
+
+def _build_lm(spec, cell, mesh, dp, n_layers: int | None = None,
+              scan_unroll: bool = False) -> CellBuild:
+    cfg = spec.make_config()
+    if n_layers is not None:
+        cfg = dataclasses.replace(cfg, n_layers=n_layers,
+                                  scan_unroll=scan_unroll)
+    from .perf_flags import FLAGS
+    if FLAGS.serve_bf16_params and cell.kind in ("prefill", "decode"):
+        cfg = dataclasses.replace(cfg, param_dtype=jnp.bfloat16)
+    axes = MeshAxes(dp=dp, tp="model")
+    model = LM(cfg, axes=axes)
+    pspecs = model.param_specs(axes)
+    params_abs = model.abstract_params()
+    b, s = cell.meta["batch"], cell.meta["seq"]
+    n_active = cfg.active_param_count()
+
+    if cell.kind == "train":
+        opt = AdamW(lr=3e-4)
+        opt_abs = jax.eval_shape(opt.init, params_abs)
+        # moments share the param specs; count is replicated
+        ospecs = type(opt_abs)(count=P(), mu=pspecs, nu=pspecs)
+        batch_abs = {"tokens": SDS((b, s), jnp.int32),
+                     "targets": SDS((b, s), jnp.int32)}
+        bspecs = {"tokens": P(dp, None), "targets": P(dp, None)}
+        fn = make_train_step(model, opt)
+        return CellBuild(
+            fn=fn,
+            abstract_args=(params_abs, opt_abs, batch_abs),
+            in_shardings=(_ns(mesh, pspecs), _ns(mesh, ospecs),
+                          _ns(mesh, bspecs)),
+            out_shardings=(_ns(mesh, pspecs), _ns(mesh, ospecs),
+                           NamedSharding(mesh, P())),
+            model_flops=6.0 * n_active * b * s,
+            donate_argnums=(0, 1))
+
+    if cell.kind == "prefill":
+        tokens_abs = SDS((b, s), jnp.int32)
+        return CellBuild(
+            fn=model.prefill,
+            abstract_args=(params_abs, tokens_abs),
+            in_shardings=(_ns(mesh, pspecs),
+                          NamedSharding(mesh, P(dp, None))),
+            out_shardings=None,
+            model_flops=2.0 * n_active * b * s)
+
+    # decode: one new token against a full cache of length s
+    hkv, dh, L = cfg.n_kv_heads, cfg.d_head, cfg.n_layers
+    cache_abs = (SDS((L, b, s, hkv, dh), cfg.compute_dtype),
+                 SDS((L, b, s, hkv, dh), cfg.compute_dtype))
+    if b == 1:
+        cspec = P(None, None, tuple(dp) + ("model",), None, None)
+        tspec = P(None, None)
+    elif cfg.attention == "chunked":
+        # chunked-local layers dynamic-slice an 8k window: a seq-sharded
+        # cache forces a full per-layer all-gather (measured 6 GiB x L/dev,
+        # SPerf C). kv heads (8) don't divide |model|=16, so shard the
+        # head-FEATURE dim (128/16): the score einsum contracts it with a
+        # tiny psum and the window slice stays local.
+        cspec = P(None, dp, None, None, "model")
+        tspec = P(dp, None)
+    else:
+        cspec = P(None, dp, "model", None, None)
+        tspec = P(dp, None)
+    token_abs = SDS((b, 1), jnp.int32)
+    pos_abs = SDS((), jnp.int32)
+    return CellBuild(
+        fn=model.decode_step,
+        abstract_args=(params_abs, cache_abs, token_abs, pos_abs),
+        in_shardings=(_ns(mesh, pspecs), (NamedSharding(mesh, cspec),) * 2,
+                      NamedSharding(mesh, tspec), NamedSharding(mesh, P())),
+        out_shardings=None,
+        model_flops=2.0 * n_active * b,
+        donate_argnums=(1,))
+
+
+# ------------------------------------------------------------------ GNN
+
+
+def _gnn_model(spec, cell):
+    cfg = spec.make_config()
+    meta = cell.meta
+    d_feat = meta.get("d_feat")
+    out_dim = meta.get("classes", 1)
+    cls = {"meshgraphnet": MeshGraphNet, "schnet": SchNet, "mace": MACE,
+           "equiformer-v2": EquiformerV2}[spec.id]
+    cfg = dataclasses.replace(cfg, out_dim=out_dim)
+    return cls(cfg, d_feat=d_feat)
+
+
+def _gnn_flops(spec, cell) -> float:
+    """Analytic useful-matmul FLOPs of one fwd pass × 3 (fwd+bwd)."""
+    cfg = spec.make_config()
+    meta = cell.meta
+    batch = meta.get("batch", 1)
+    n = meta["n_nodes"] * batch
+    m = meta["n_edges"] * batch
+    if spec.id == "meshgraphnet":
+        h = cfg.d_hidden
+        per_edge = 2 * (3 * h * h + h * h)
+        per_node = 2 * (2 * h * h + h * h)
+        fwd = cfg.n_layers * (per_edge * m + per_node * n)
+    elif spec.id == "schnet":
+        h, r = cfg.d_hidden, cfg.n_rbf
+        per_edge = 2 * (r * h + h * h)
+        per_node = 2 * (3 * h * h)
+        fwd = cfg.n_interactions * (per_edge * m + per_node * n)
+    elif spec.id == "mace":
+        C = cfg.channels
+        dims = sum((2 * l1 + 1) * (2 * l2 + 1) * (2 * l3 + 1)
+                   for l1 in range(3) for l2 in range(3) for l3 in range(3)
+                   if abs(l1 - l2) <= l3 <= l1 + l2)
+        per_edge = 2 * dims * C + 2 * 9 * C * C     # CG + channel mix
+        per_node = 2 * (2 * dims * C + 8 * 9 * C * C)
+        fwd = cfg.n_layers * (per_edge * m + per_node * n)
+    else:  # equiformer-v2
+        C, lm = cfg.channels, cfg.l_max
+        rot = 2 * sum((2 * l + 1) ** 2 for l in range(lm + 1)) * C * 2
+        so2 = 2 * sum(((lm + 1 - mm) * C) ** 2 * (1 if mm == 0 else 4)
+                      for mm in range(cfg.m_max + 1))
+        per_edge = rot + so2
+        per_node = 2 * (lm + 1) * C * C * 3
+        fwd = cfg.n_layers * (per_edge * m + per_node * n)
+    return 3.0 * fwd
+
+
+def _batched_gnn_loss(model):
+    def loss(params, batch):
+        def single(b):
+            out = model.forward(params, b)
+            return jnp.sum(out[..., 0])
+        energies = jax.vmap(single)(
+            {k: v for k, v in batch.items() if k != "energy"})
+        return jnp.mean(jnp.square(energies - batch["energy"]))
+    return loss
+
+
+def _build_gnn(spec, cell, mesh, dp) -> CellBuild:
+    model = _gnn_model(spec, cell)
+    meta = cell.meta
+    opt = AdamW(lr=1e-3)
+    # §Perf: GNN params are replicated, so the model axis is idle for
+    # graph data — the gnn_edge_dp flag shards node/edge arrays over BOTH
+    # axes (256-way instead of 16-way)
+    from .perf_flags import FLAGS
+    gdp = FLAGS.gnn_edge_dp if FLAGS.gnn_edge_dp is not None else dp
+    params_abs = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    pspecs = _replicated_specs(params_abs)       # GNN params are small
+    opt_abs = jax.eval_shape(opt.init, params_abs)
+    ospecs = type(opt_abs)(count=P(), mu=pspecs, nu=pspecs)
+
+    pad32 = lambda x: -(-x // 512) * 512   # pad node/edge counts so every
+    # graph array shards evenly on all mesh configurations, including the
+    # 256/512-way flat sharding of the §Perf variant (pads-to-shard)
+
+    if cell.name == "molecule":
+        bsz, n, m = meta["batch"], meta["n_nodes"], meta["n_edges"]
+        batch_abs = {
+            "species": SDS((bsz, n), jnp.int32),
+            "pos": SDS((bsz, n, 3), jnp.float32),
+            "edge_src": SDS((bsz, m), jnp.int32),
+            "edge_dst": SDS((bsz, m), jnp.int32),
+            "energy": SDS((bsz,), jnp.float32),
+        }
+        bspecs = {k: P(dp, *([None] * (v.ndim - 1)))
+                  for k, v in batch_abs.items()}
+        loss_fn = _batched_gnn_loss(model)
+    else:
+        n, m, d = pad32(meta["n_nodes"]), pad32(meta["n_edges"]), \
+            meta["d_feat"]
+        batch_abs = {
+            "feats": SDS((n, d), jnp.float32),
+            "pos": SDS((n, 3), jnp.float32),
+            "edge_src": SDS((m,), jnp.int32),
+            "edge_dst": SDS((m,), jnp.int32),
+            "labels": SDS((n,), jnp.int32),
+        }
+        bspecs = {"feats": P(gdp, None), "pos": P(gdp, None),
+                  "edge_src": P(gdp), "edge_dst": P(gdp),
+                  "labels": P(gdp)}
+        loss_fn = model.loss
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        new_params, new_state = opt.update(grads, opt_state, params)
+        return new_params, new_state, {"loss": loss}
+
+    return CellBuild(
+        fn=train_step,
+        abstract_args=(params_abs, opt_abs, batch_abs),
+        in_shardings=(_ns(mesh, pspecs), _ns(mesh, ospecs),
+                      _ns(mesh, bspecs)),
+        out_shardings=(_ns(mesh, pspecs), _ns(mesh, ospecs),
+                       NamedSharding(mesh, P())),
+        model_flops=_gnn_flops(spec, cell),
+        donate_argnums=(0, 1))
+
+
+# --------------------------------------------------------------- recsys
+
+
+def _build_recsys(spec, cell, mesh, dp) -> CellBuild:
+    cfg = spec.make_config()
+    model = WideDeep(cfg)
+    meta = cell.meta
+    params_abs = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    pspecs = model.param_specs(tp="model")
+    b = meta["batch"]
+    mlp_params = sum(cfg.mlp[i] * cfg.mlp[i + 1]
+                     for i in range(len(cfg.mlp) - 1))
+    d_in = cfg.n_sparse * cfg.embed_dim + cfg.n_dense
+    mlp_params += d_in * cfg.mlp[0] + cfg.mlp[-1]
+    fwd_flops = 2.0 * mlp_params * b
+
+    batch_abs = {
+        "dense": SDS((b, cfg.n_dense), jnp.float32),
+        "sparse_ids": SDS((b, cfg.n_sparse, cfg.ids_per_field), jnp.int32),
+    }
+    bspecs = {"dense": P(dp, None), "sparse_ids": P(dp, None, None)}
+
+    if cell.kind == "train":
+        from .perf_flags import FLAGS
+        if FLAGS.recsys_hybrid_opt:
+            from ..optim import HybridAdamW
+            opt = HybridAdamW(adamw=AdamW(lr=1e-3))
+        else:
+            opt = AdamW(lr=1e-3)
+        opt_abs = jax.eval_shape(opt.init, params_abs)
+        mspecs = jax.tree.map(
+            lambda leaf, sp: P() if leaf.ndim == 0 else sp,
+            opt_abs.mu, pspecs)
+        ospecs = type(opt_abs)(count=P(), mu=mspecs, nu=mspecs)
+        batch_abs["labels"] = SDS((b,), jnp.float32)
+        bspecs["labels"] = P(dp)
+        fn = make_recsys_train_step(model, opt)
+        return CellBuild(
+            fn=fn,
+            abstract_args=(params_abs, opt_abs, batch_abs),
+            in_shardings=(_ns(mesh, pspecs), _ns(mesh, ospecs),
+                          _ns(mesh, bspecs)),
+            out_shardings=(_ns(mesh, pspecs), _ns(mesh, ospecs),
+                           NamedSharding(mesh, P())),
+            model_flops=3.0 * fwd_flops,
+            donate_argnums=(0, 1))
+
+    if cell.kind == "serve":
+        return CellBuild(
+            fn=model.forward,
+            abstract_args=(params_abs, batch_abs),
+            in_shardings=(_ns(mesh, pspecs), _ns(mesh, bspecs)),
+            out_shardings=None,
+            model_flops=fwd_flops)
+
+    # retrieval: 1 query vs n_candidates
+    nc = meta["n_candidates"]
+    batch_abs["candidates"] = SDS((nc, cfg.retrieval_dim), jnp.float32)
+    bspecs["candidates"] = P(tuple(dp) + ("model",), None)
+    bspecs["dense"] = P(None, None)
+    bspecs["sparse_ids"] = P(None, None, None)
+    return CellBuild(
+        fn=model.retrieval_scores,
+        abstract_args=(params_abs, batch_abs),
+        in_shardings=(_ns(mesh, pspecs), _ns(mesh, bspecs)),
+        out_shardings=None,
+        model_flops=fwd_flops + 2.0 * nc * cfg.retrieval_dim)

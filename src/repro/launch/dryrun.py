@@ -1,0 +1,244 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × shape × mesh)
+cell and extract the roofline terms from the compiled artifact.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+        --out results/dryrun.jsonl
+
+The XLA_FLAGS line above MUST precede every other import (jax locks the
+device count at first init); smoke tests and benchmarks import the library
+normally and see 1 device.
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+
+from .. import configs
+from .cells import build_cell
+from .mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16, make_production_mesh,
+                   n_devices)
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _result_bytes(line: str) -> int:
+    """Bytes of an HLO op's result type(s) — handles tuple results."""
+    lhs = line.split(" = ", 1)[1] if " = " in line else line
+    # result types appear before the op name token
+    total = 0
+    for m in _SHAPE_RE.finditer(lhs.split("(", 1)[0]):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-collective-kind result bytes in the (post-SPMD) module."""
+    out = {k: 0 for k in COLLECTIVE_OPS}
+    counts = {k: 0 for k in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if " = " not in ls:
+            continue
+        rhs = ls.split(" = ", 1)[1]
+        for kind in COLLECTIVE_OPS:
+            # match the op name, e.g. "bf16[...] all-gather(", incl. -start
+            if re.search(rf"\b{kind}(-start)?\(", rhs):
+                out[kind] += _result_bytes(ls)
+                counts[kind] += 1
+                break
+    out_total = sum(out.values())
+    return {"bytes_by_kind": out, "counts": counts, "total": out_total}
+
+
+def _compile_costs(arch_id, shape_name, mesh, multi_pod, n_layers=None,
+                   scan_unroll=False):
+    """Compile one variant, return (flops, bytes, coll_bytes) per device."""
+    build = build_cell(arch_id, shape_name, mesh, multi_pod,
+                       n_layers=n_layers, scan_unroll=scan_unroll)
+    with mesh:
+        compiled = jax.jit(
+            build.fn, in_shardings=build.in_shardings,
+            out_shardings=build.out_shardings,
+            donate_argnums=build.donate_argnums,
+        ).lower(*build.abstract_args).compile()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)),
+            float(coll["total"]), coll)
+
+
+def _lm_cost_extrapolated(spec, arch_id, shape_name, mesh, multi_pod):
+    """XLA cost_analysis counts a scan (while) body ONCE regardless of trip
+    count (verified empirically).  The LM step is affine in the number of
+    scan iterations, so measure at 1 and 2 layer-groups and extrapolate:
+        cost(G groups) = c1 + (G - 1) · (c2 - c1).
+    """
+    cfg = spec.make_config()
+    g = cfg.layer_group
+    groups_full = cfg.n_layers // g
+    f1, b1, x1, coll1 = _compile_costs(arch_id, shape_name, mesh, multi_pod,
+                                       n_layers=g, scan_unroll=True)
+    f2, b2, x2, _ = _compile_costs(arch_id, shape_name, mesh, multi_pod,
+                                   n_layers=2 * g, scan_unroll=True)
+    lin = lambda c1, c2: c1 + (groups_full - 1) * (c2 - c1)
+    return lin(f1, f2), lin(b1, b2), lin(x1, x2), coll1
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
+             verbose: bool = True) -> dict:
+    spec = configs.get(arch_id)
+    cell = spec.shapes[shape_name]
+    mesh_name = "multi_pod_2x16x16" if multi_pod else "single_pod_16x16"
+    rec = {"arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+           "kind": cell.kind, "n_devices": n_devices(multi_pod)}
+    if cell.skip:
+        rec["status"] = "skipped"
+        rec["skip_reason"] = cell.skip
+        return rec
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    build = build_cell(arch_id, shape_name, mesh, multi_pod)
+    with mesh:
+        jitted = jax.jit(build.fn,
+                         in_shardings=build.in_shardings,
+                         out_shardings=build.out_shardings,
+                         donate_argnums=build.donate_argnums)
+        lowered = jitted.lower(*build.abstract_args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()   # the full-config gate
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+
+    chips = rec["n_devices"]
+    if spec.family == "lm":
+        flops_dev, bytes_dev, coll_dev, coll = _lm_cost_extrapolated(
+            spec, arch_id, shape_name, mesh, multi_pod)
+    else:
+        flops_dev = float(cost.get("flops", 0.0))
+        bytes_dev = float(cost.get("bytes accessed", 0.0))
+        coll_dev = float(coll["total"])
+    t_comp = flops_dev / PEAK_FLOPS_BF16
+    t_mem = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    dominant = max((("compute", t_comp), ("memory", t_mem),
+                    ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    model_flops_dev = build.model_flops / chips
+
+    rec.update({
+        "status": "ok",
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "per_device": {
+            "hlo_flops": flops_dev,
+            "hlo_bytes": bytes_dev,
+            "collective_bytes": coll_dev,
+            "collectives": coll,
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "peak_hbm_est": mem.argument_size_in_bytes
+            + mem.output_size_in_bytes + mem.temp_size_in_bytes
+            - mem.alias_size_in_bytes,
+        },
+        "roofline": {
+            "compute_s": t_comp,
+            "memory_s": t_mem,
+            "collective_s": t_coll,
+            "dominant": dominant,
+            "bound_s": max(t_comp, t_mem, t_coll),
+        },
+        "model_flops_total": build.model_flops,
+        "useful_flops_ratio": (model_flops_dev / flops_dev
+                               if flops_dev else 0.0),
+        "notes": build.notes,
+    })
+    if verbose:
+        pd = rec["per_device"]
+        rl = rec["roofline"]
+        print(f"[{arch_id} × {shape_name} × {mesh_name}] "
+              f"compile {t_compile:.1f}s | "
+              f"flops/dev {pd['hlo_flops']:.3e} | bytes/dev "
+              f"{pd['hlo_bytes']:.3e} | coll/dev "
+              f"{pd['collective_bytes']:.3e} | "
+              f"terms (ms): C={rl['compute_s']*1e3:.2f} "
+              f"M={rl['memory_s']*1e3:.2f} X={rl['collective_s']*1e3:.2f} "
+              f"-> {rl['dominant']} | useful "
+              f"{rec['useful_flops_ratio']*100:.0f}% | peakHBM/dev "
+              f"{pd['peak_hbm_est']/2**30:.2f} GiB")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch_id, spec in sorted(configs.REGISTRY.items()):
+            for shape_name in spec.shapes:
+                cells.append((arch_id, shape_name))
+    else:
+        assert args.arch, "--arch or --all required"
+        spec = configs.get(args.arch)
+        shapes = [args.shape] if args.shape else list(spec.shapes)
+        cells = [(args.arch, s) for s in shapes]
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    out_f = open(args.out, "a") if args.out else None
+    failures = 0
+    for arch_id, shape_name in cells:
+        for multi_pod in meshes:
+            try:
+                rec = run_cell(arch_id, shape_name, multi_pod)
+            except Exception as e:
+                traceback.print_exc()
+                rec = {"arch": arch_id, "shape": shape_name,
+                       "mesh": "multi" if multi_pod else "single",
+                       "status": "error", "error": repr(e)}
+                failures += 1
+            if out_f:
+                out_f.write(json.dumps(rec) + "\n")
+                out_f.flush()
+    if out_f:
+        out_f.close()
+    print(f"done; failures={failures}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Production mesh factory (a FUNCTION, never module-level state — importing
+this module must not touch jax device state).
+
+Target: TPU v5e pods; 256 chips/pod as a (16, 16) (data, model) torus;
+multi-pod adds a leading "pod" axis (pure DP across the slow inter-pod
+links).  Hardware constants used by the roofline layer live here too.
+"""
+from __future__ import annotations
+
+import jax
+
+# TPU v5e per-chip peaks (assignment-provided)
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BW = 819e9                    # bytes/s
+ICI_BW = 50e9                     # bytes/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def data_axes(multi_pod: bool) -> tuple[str, ...]:
+    """Axes that carry batch/FSDP sharding ('pod' folds into data)."""
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def n_devices(multi_pod: bool) -> int:
+    return 512 if multi_pod else 256

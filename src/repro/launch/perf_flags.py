@@ -1,0 +1,42 @@
+"""Performance-iteration toggles (§Perf hillclimbing).
+
+Every flag defaults to the paper-faithful / naive baseline; the hillclimb
+driver flips one at a time, re-lowers, and records before/after roofline
+terms in EXPERIMENTS.md §Perf.  Flags are read at TRACE time — set them
+before building a cell.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class PerfFlags:
+    # LM attention lowering stand-in (the TPU path is the Pallas kernel,
+    # which keeps scores in VMEM; these emulate its HBM profile):
+    attn_bf16_scores: bool = False      # score tensors bf16 instead of f32
+    attn_additive_mask: bool = False    # one precomputed additive bias
+                                        # instead of per-op select chains
+    # MoE decode: capacity floor for tiny token counts (baseline 8 keeps
+    # small batches dropless but pays 8x expert-GEMM waste at batch 128)
+    moe_decode_capacity_floor: int | None = None
+    # recsys: momentum-free updates for embedding tables (hybrid optimizer)
+    recsys_hybrid_opt: bool = False
+    # LM serving: bf16 parameters (inference-standard) -> FSDP weight
+    # all-gathers and weight HBM reads halve vs the f32 training masters
+    serve_bf16_params: bool = False
+    # GNN: gather features once per layer pair instead of per layer
+    gnn_reuse_wigner: bool = True       # (already baseline-on)
+    # GNN: pin edge-space tensors to the data axes (gathered edge features
+    # lose their sharding through XLA propagation -> replicated TB-scale
+    # temps on ogb_products); None = baseline (no pins)
+    gnn_edge_dp: tuple | None = None
+
+
+FLAGS = PerfFlags()
+
+
+def reset():
+    global FLAGS
+    FLAGS = PerfFlags()
+    return FLAGS

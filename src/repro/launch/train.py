@@ -1,0 +1,96 @@
+"""Training launcher.
+
+Smoke-scale (this CPU container):
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b \
+        --smoke --steps 20
+Production-scale lowering happens through dryrun.py; on a real TPU
+cluster this same entry point runs with --mesh single|multi.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from .. import configs
+from ..data import GraphBatchStream, RecsysStream, TokenStream
+from ..models.gnn import (MACE, EquiformerV2, MeshGraphNet, SchNet)
+from ..models.recsys import WideDeep, make_recsys_train_step
+from ..models.transformer import LM, make_train_step
+from ..optim import AdamW
+from ..train import Trainer, TrainerConfig
+
+
+def build_smoke(arch_id: str, seed: int = 0):
+    spec = configs.get(arch_id)
+    cfg = spec.make_reduced()
+    key = jax.random.PRNGKey(seed)
+    if spec.family == "lm":
+        model = LM(cfg)
+        opt = AdamW(lr=1e-3)
+        params = model.init(key)
+        stream = TokenStream(batch=4, seq=32, vocab=cfg.vocab, seed=seed)
+        step = make_train_step(model, opt)
+        return step, params, opt.init(params), stream
+    if spec.family == "recsys":
+        model = WideDeep(cfg)
+        opt = AdamW(lr=1e-3)
+        params = model.init(key)
+        stream = RecsysStream(batch=32, n_dense=cfg.n_dense,
+                              n_sparse=cfg.n_sparse,
+                              vocab_sizes=cfg.vocab_sizes,
+                              ids_per_field=cfg.ids_per_field, seed=seed)
+        step = make_recsys_train_step(model, opt)
+        return step, params, opt.init(params), stream
+    # gnn: batched molecular stream
+    cls = {"meshgraphnet": MeshGraphNet, "schnet": SchNet, "mace": MACE,
+           "equiformer-v2": EquiformerV2}[spec.id]
+    model = cls(cfg)
+    opt = AdamW(lr=1e-3)
+    params = model.init(key)
+    stream = GraphBatchStream(batch=4, n_nodes=16, n_edges=48, seed=seed)
+
+    def loss_fn(params, batch):
+        def single(b):
+            out = model.forward(params, b)
+            return jax.numpy.sum(out[..., 0])
+        e = jax.vmap(single)({k: v for k, v in batch.items()
+                              if k != "energy"})
+        return jax.numpy.mean(jax.numpy.square(e - batch["energy"]))
+
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        p, s = opt.update(grads, opt_state, params)
+        return p, s, {"loss": loss}
+
+    return step, params, opt.init(params), stream
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+    if not args.smoke:
+        raise SystemExit("full-scale training requires a TPU cluster; use "
+                         "--smoke here (dryrun.py proves the full configs)")
+    step, params, opt_state, stream = build_smoke(args.arch)
+
+    def put(b):
+        return jax.tree.map(jax.numpy.asarray, b)
+
+    tr = Trainer(step, params, opt_state, stream,
+                 TrainerConfig(num_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                               log_every=5),
+                 put_batch=put)
+    hist = tr.run()
+    losses = [h["loss"] for h in hist]
+    print(f"[train] {args.arch}: first loss {losses[0]:.4f}, "
+          f"last loss {losses[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+import os
+if "--dryrun" in __import__("sys").argv:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""The paper's technique at production scale: distributed graph trimming.
+
+    # run locally on this container (1 device):
+    PYTHONPATH=src python -m repro.launch.trim --graph BA --method ac6
+    # production-mesh dry-run (512 virtual chips):
+    PYTHONPATH=src python -m repro.launch.trim --dryrun --method ac6
+"""
+import argparse
+import time
+
+import numpy as np
+
+
+def run_local(graph_name: str, method: str, workers: int):
+    from ..core import trim, trim_oracle
+    from ..graphs import make
+    g = make(graph_name)
+    t0 = time.time()
+    res = trim(g, method=method, workers=workers)
+    dt = time.time() - t0
+    print(f"[trim] {graph_name} n={g.n} m={g.m} method={method}: "
+          f"trimmed {res.n_trimmed} ({res.trimmed_fraction*100:.1f}%) "
+          f"rounds={res.rounds} edges={res.edges_traversed} "
+          f"max|Qp|={res.max_frontier} in {dt:.2f}s")
+    return res
+
+
+def run_dryrun(method: str):
+    """Lower + compile distributed trimming for the 512-chip mesh."""
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    from ..core.distributed import (_ac3_body, _ac6_body, build_partition)
+    from ..core.graph import CSRGraph
+    from ..graphs.generators import erdos_renyi
+    from .mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=True)
+    num = 512
+    axis = ("pod", "data", "model")
+    # synthetic production-scale graph: shapes only matter for lowering,
+    # so build a tiny host graph and lift the partition shapes
+    n, m = 64_000_000, 512_000_000
+    nl, ml = n // num, m // num  # balanced partition assumption
+    lip = jax.ShapeDtypeStruct((num, nl + 1), jax.numpy.int32)
+    lix = jax.ShapeDtypeStruct((num, 2 * ml), jax.numpy.int32)
+    body = {"ac3": _ac3_body, "ac6": _ac6_body}[method](axis)
+    f = jax.jit(jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(axis), P(axis)),
+        out_specs=(P(axis),) * 4))
+    t0 = time.time()
+    lowered = f.lower(lip, lix)
+    compiled = lowered.compile()
+    dt = time.time() - t0
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    n_ag = hlo.count("all-gather")
+    print(f"[trim-dryrun] {method} on 2x16x16 (512 chips): compiled in "
+          f"{dt:.1f}s; per-device args "
+          f"{mem.argument_size_in_bytes/2**20:.1f} MiB, temps "
+          f"{mem.temp_size_in_bytes/2**20:.1f} MiB, all-gather sites "
+          f"{n_ag}")
+    print(f"  graph: n={n:,} m={m:,} -> {nl:,} vertices/device; "
+          f"status all_gather {n/8/2**20:.1f} MiB per round")
+    return compiled
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--graph", default="BA")
+    ap.add_argument("--method", default="ac6")
+    ap.add_argument("--workers", type=int, default=16)
+    ap.add_argument("--dryrun", action="store_true")
+    args = ap.parse_args()
+    if args.dryrun:
+        run_dryrun(args.method)
+    else:
+        run_local(args.graph, args.method, args.workers)
+
+
+if __name__ == "__main__":
+    main()

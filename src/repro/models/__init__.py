@@ -1,0 +1,3 @@
+from . import equivariant, gnn, layers, recsys, transformer
+
+__all__ = ["equivariant", "gnn", "layers", "recsys", "transformer"]

@@ -1,0 +1,7 @@
+from .equiformer_v2 import EquiformerV2, EquiformerV2Config
+from .mace import MACE, MACEConfig
+from .meshgraphnet import MeshGraphNet, MeshGraphNetConfig
+from .schnet import SchNet, SchNetConfig
+
+__all__ = ["MeshGraphNet", "MeshGraphNetConfig", "SchNet", "SchNetConfig",
+           "MACE", "MACEConfig", "EquiformerV2", "EquiformerV2Config"]

@@ -1,0 +1,93 @@
+"""Shared GNN machinery.
+
+JAX has no native sparse message passing — per the assignment, the
+scatter/gather layer IS part of this system: messages are gathered by edge
+index and reduced with ``segment_sum`` (the Pallas ``segment_reduce``
+kernel on TPU; see kernels/segment_reduce.py for the MXU one-hot form).
+All four GNN archs consume the same batch schema:
+
+  node input:  ``feats`` (n, d_feat) float  OR  ``species`` (n,) int32
+  geometry:    ``pos`` (n, 3) float
+  topology:    ``edge_src``/``edge_dst`` (m,) int32  (messages flow src→dst)
+  supervision: ``labels`` (n,) int32  or  ``energy`` scalar/batched
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_sum(values, seg_ids, num_segments: int):
+    return jax.ops.segment_sum(values, seg_ids, num_segments=num_segments)
+
+
+def segment_mean(values, seg_ids, num_segments: int):
+    s = segment_sum(values, seg_ids, num_segments)
+    c = segment_sum(jnp.ones_like(seg_ids, jnp.float32)[
+        (...,) + (None,) * (values.ndim - 1)], seg_ids, num_segments)
+    return s / jnp.maximum(c, 1.0)
+
+
+def segment_softmax(logits, seg_ids, num_segments: int):
+    """Softmax over edges grouped by destination (graph attention)."""
+    mx = jax.ops.segment_max(logits, seg_ids, num_segments=num_segments)
+    mx = jnp.where(jnp.isfinite(mx), mx, 0.0)
+    e = jnp.exp(logits - mx[seg_ids])
+    z = segment_sum(e, seg_ids, num_segments)
+    return e / jnp.maximum(z[seg_ids], 1e-9)
+
+
+def mlp_init(key, sizes, dtype=jnp.float32):
+    ks = jax.random.split(key, len(sizes) - 1)
+    return [{
+        "w": (jax.random.normal(ks[i], (sizes[i], sizes[i + 1]), jnp.float32)
+              / jnp.sqrt(sizes[i])).astype(dtype),
+        "b": jnp.zeros((sizes[i + 1],), dtype),
+    } for i in range(len(sizes) - 1)]
+
+
+def mlp_apply(params, x, act=jax.nn.silu, final_act=False, norm=False):
+    for i, lyr in enumerate(params):
+        x = x @ lyr["w"] + lyr["b"]
+        if i < len(params) - 1 or final_act:
+            x = act(x)
+    if norm:
+        x = layer_norm(x)
+    return x
+
+
+def layer_norm(x, eps=1e-6):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps)
+
+
+def node_input_embed(params, batch, hidden: int):
+    """Project dense features or embed species into the hidden dim."""
+    if "feats" in batch:
+        return batch["feats"] @ params["in_proj"]
+    return jnp.take(params["species_embed"], batch["species"], axis=0)
+
+
+def node_input_params(key, cfg_hidden: int, d_feat: int | None,
+                      n_species: int = 32):
+    k1, = jax.random.split(key, 1)
+    if d_feat is not None:
+        return {"in_proj": jax.random.normal(
+            k1, (d_feat, cfg_hidden), jnp.float32) / jnp.sqrt(d_feat)}
+    return {"species_embed": jax.random.normal(
+        k1, (n_species, cfg_hidden), jnp.float32) * 0.1}
+
+
+def graph_loss(out, batch):
+    """Node classification (labels) or energy regression, by batch keys."""
+    if "labels" in batch:
+        logz = jax.nn.logsumexp(out, axis=-1)
+        tgt = jnp.take_along_axis(out, batch["labels"][..., None],
+                                  axis=-1)[..., 0]
+        return jnp.mean(logz - tgt)
+    pred = out  # (..,) per-graph energy
+    return jnp.mean(jnp.square(pred - batch["energy"]))

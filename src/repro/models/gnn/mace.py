@@ -1,0 +1,157 @@
+"""MACE [arXiv:2206.07697]: higher-order equivariant message passing via
+ACE symmetric contractions.  Assigned config: n_layers=2, d_hidden=128
+channels, l_max=2, correlation_order=3, n_rbf=8 Bessel.
+
+Structure (faithful core):
+  A-functions:  A_i = Σ_j R(r_ij) · (h_j ⊗_CG Y(û_ij))   (one-particle basis)
+  B-functions:  symmetric contractions A, A⊗A, A⊗A⊗A (correlation 1..3),
+                realized as iterated real-CG products with per-path weights
+  update:       per-l linear + residual; per-layer invariant readout
+
+Irrep features are packed as (n, (l_max+1)², C); per-l blocks are static
+slices.  All CG tensors come from equivariant.real_cg (convention-free).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..equivariant import bessel_basis, l_slices, num_sh, real_cg, sh
+from .common import graph_loss, mlp_init, mlp_apply, segment_sum
+
+
+def _triples(l_max: int):
+    out = []
+    for l1 in range(l_max + 1):
+        for l2 in range(l_max + 1):
+            for l3 in range(l_max + 1):
+                if abs(l1 - l2) <= l3 <= l1 + l2:
+                    out.append((l1, l2, l3))
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class MACEConfig:
+    name: str = "mace"
+    n_layers: int = 2
+    channels: int = 128
+    l_max: int = 2
+    correlation: int = 3
+    n_rbf: int = 8
+    cutoff: float = 5.0
+    n_species: int = 32
+    out_dim: int = 1
+
+
+class MACE:
+    def __init__(self, cfg: MACEConfig, d_feat: int | None = None):
+        self.cfg = cfg
+        self.d_feat = d_feat
+        self.triples = _triples(cfg.l_max)
+        self.slices = l_slices(cfg.l_max)
+
+    # ------------------------------------------------------------- params
+    def init(self, key):
+        cfg = self.cfg
+        C = cfg.channels
+        nl = cfg.l_max + 1
+        ks = iter(jax.random.split(key, 8 + cfg.n_layers * 8))
+        nrm = lambda k, *s: jax.random.normal(k, s, jnp.float32) / jnp.sqrt(s[0])
+        params = {"layers": [], "readouts": []}
+        if self.d_feat is not None:
+            params["in_proj"] = nrm(next(ks), self.d_feat, C)
+        else:
+            params["species_embed"] = jax.random.normal(
+                next(ks), (cfg.n_species, C), jnp.float32) * 0.1
+        for _ in range(cfg.n_layers):
+            lp = {
+                # radial MLP -> per (path, channel) weights for A-functions
+                "radial": mlp_init(next(ks),
+                                   [cfg.n_rbf, 64, len(self.triples) * C]),
+                "w_A": nrm(next(ks), len(self.triples), C, C) / 3.0,
+                "w_B2": nrm(next(ks), len(self.triples), C) / 3.0,
+                "w_B3": nrm(next(ks), len(self.triples), C) / 3.0,
+                "lin_self": nrm(next(ks), nl, C, C),
+                "lin_msg": nrm(next(ks), nl, C, C),
+                "lin_b2": nrm(next(ks), nl, C, C),
+                "lin_b3": nrm(next(ks), nl, C, C),
+            }
+            params["layers"].append(lp)
+            params["readouts"].append(mlp_init(next(ks), [C, 16, cfg.out_dim]))
+        return params
+
+    def _blocks(self, h):
+        return [h[:, a:b] for a, b in self.slices]
+
+    def _pack(self, blocks):
+        return jnp.concatenate(blocks, axis=1)
+
+    def _cg_prod(self, xs, ys, weights=None):
+        """Per-l3 CG products of two per-l block lists -> block list."""
+        cfg = self.cfg
+        out = [0.0] * (cfg.l_max + 1)
+        for p, (l1, l2, l3) in enumerate(self.triples):
+            w = jnp.asarray(real_cg(l1, l2, l3), jnp.float32)
+            term = jnp.einsum("uvw,nuc,nvc->nwc", w, xs[l1], ys[l2])
+            if weights is not None:
+                term = term * weights[p][None, None, :]
+            out[l3] = out[l3] + term
+        return out
+
+    # ------------------------------------------------------------ forward
+    def forward(self, params, batch):
+        cfg = self.cfg
+        C = cfg.channels
+        n = (batch["feats"].shape[0] if "feats" in batch
+             else batch["species"].shape[0])
+        src, dst = batch["edge_src"], batch["edge_dst"]
+        rel = batch["pos"][src] - batch["pos"][dst]
+        r = jnp.linalg.norm(rel, axis=-1)
+        Y = sh(rel, cfg.l_max)                                  # (m, 9)
+        rad = bessel_basis(r, cfg.n_rbf, cfg.cutoff)            # (m, 8)
+
+        if "feats" in batch:
+            h0 = batch["feats"] @ params["in_proj"]
+        else:
+            h0 = jnp.take(params["species_embed"], batch["species"], axis=0)
+        h = jnp.zeros((n, num_sh(cfg.l_max), C), jnp.float32)
+        h = h.at[:, 0, :].set(h0)
+
+        energy = 0.0
+        for lp, ro in zip(params["layers"], params["readouts"]):
+            rw = mlp_apply(lp["radial"], rad).reshape(
+                -1, len(self.triples), C)                       # (m, P, C)
+            # zero-length edges (self-loops / padding) have no direction
+            rw = rw * (r > 1e-6)[:, None, None]
+            hb = self._blocks(h)
+            yb = self._blocks(Y[:, :, None])                    # (m, 2l+1, 1)
+            # A-functions: one-particle basis, per path
+            A = [0.0] * (cfg.l_max + 1)
+            for p, (l1, l2, l3) in enumerate(self.triples):
+                w = jnp.asarray(real_cg(l1, l2, l3), jnp.float32)
+                mixed = jnp.einsum("nuc,cd->nud", hb[l1][src], lp["w_A"][p])
+                msg = jnp.einsum("uvw,euc,ev->ewc", w, mixed, yb[l2][:, :, 0])
+                A[l3] = A[l3] + segment_sum(msg * rw[:, p][:, None, :],
+                                            dst, n)
+            # symmetric contractions (correlation 2, 3)
+            B2 = self._cg_prod(A, A, lp["w_B2"])
+            B3 = self._cg_prod(B2, A, lp["w_B3"])
+            msg_blocks = []
+            for l in range(cfg.l_max + 1):
+                m = jnp.einsum("nuc,cd->nud", A[l], lp["lin_msg"][l])
+                m = m + jnp.einsum("nuc,cd->nud", B2[l], lp["lin_b2"][l])
+                m = m + jnp.einsum("nuc,cd->nud", B3[l], lp["lin_b3"][l])
+                m = m + jnp.einsum("nuc,cd->nud", self._blocks(h)[l],
+                                   lp["lin_self"][l])
+                msg_blocks.append(m)
+            h = self._pack(msg_blocks)
+            energy = energy + mlp_apply(ro, h[:, 0, :])          # (n, out)
+        return energy
+
+    def loss(self, params, batch):
+        out = self.forward(params, batch)
+        if "energy" in batch:
+            out = jnp.sum(out[..., 0], axis=-1)
+        return graph_loss(out, batch)

@@ -1,0 +1,73 @@
+"""MeshGraphNet [arXiv:2010.03409]: encode-process-decode with edge+node
+MLPs, sum aggregation, residual updates.  n_layers=15, d_hidden=128,
+mlp_layers=2 (assigned config).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .common import (graph_loss, layer_norm, mlp_apply, mlp_init,
+                     node_input_embed, node_input_params, segment_sum)
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshGraphNetConfig:
+    name: str = "meshgraphnet"
+    n_layers: int = 15
+    d_hidden: int = 128
+    mlp_layers: int = 2
+    out_dim: int = 3          # mesh dynamics output / classes
+    aggregator: str = "sum"
+
+
+class MeshGraphNet:
+    def __init__(self, cfg: MeshGraphNetConfig, d_feat: int | None = None):
+        self.cfg = cfg
+        self.d_feat = d_feat
+
+    def init(self, key):
+        cfg = self.cfg
+        h = cfg.d_hidden
+        ks = jax.random.split(key, cfg.n_layers * 2 + 4)
+        hid = [h] * cfg.mlp_layers
+        params = {
+            "input": node_input_params(ks[0], h, self.d_feat),
+            "edge_enc": mlp_init(ks[1], [4] + hid + [h]),
+            "node_enc": mlp_init(ks[2], [h] + hid + [h]),
+            "decoder": mlp_init(ks[3], [h] + hid + [cfg.out_dim]),
+            "layers": [],
+        }
+        for i in range(cfg.n_layers):
+            params["layers"].append({
+                "edge_mlp": mlp_init(ks[4 + 2 * i], [3 * h] + hid + [h]),
+                "node_mlp": mlp_init(ks[5 + 2 * i], [2 * h] + hid + [h]),
+            })
+        return params
+
+    def forward(self, params, batch):
+        cfg = self.cfg
+        n = (batch["feats"].shape[0] if "feats" in batch
+             else batch["species"].shape[0])
+        src, dst = batch["edge_src"], batch["edge_dst"]
+        rel = batch["pos"][src] - batch["pos"][dst]              # (m, 3)
+        dist = jnp.linalg.norm(rel, axis=-1, keepdims=True)
+        e = mlp_apply(params["edge_enc"],
+                      jnp.concatenate([rel, dist], -1), norm=True)
+        x = node_input_embed(params["input"], batch, cfg.d_hidden)
+        x = mlp_apply(params["node_enc"], x, norm=True)
+        for lyr in params["layers"]:
+            e_in = jnp.concatenate([e, x[src], x[dst]], axis=-1)
+            e = e + layer_norm(mlp_apply(lyr["edge_mlp"], e_in))
+            agg = segment_sum(e, dst, n)
+            x = x + layer_norm(mlp_apply(
+                lyr["node_mlp"], jnp.concatenate([x, agg], -1)))
+        return mlp_apply(params["decoder"], x)
+
+    def loss(self, params, batch):
+        out = self.forward(params, batch)
+        if "energy" in batch:
+            out = jnp.sum(out[..., 0], axis=-1)   # pooled scalar
+        return graph_loss(out, batch)

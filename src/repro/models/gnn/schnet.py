@@ -1,0 +1,73 @@
+"""SchNet [arXiv:1706.08566]: continuous-filter convolutions over Gaussian
+RBF of interatomic distances.  n_interactions=3, d_hidden=64, rbf=300,
+cutoff=10 (assigned config).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..equivariant import gaussian_basis, poly_cutoff
+from .common import (graph_loss, mlp_apply, mlp_init, node_input_embed,
+                     node_input_params, segment_sum)
+
+
+def shifted_softplus(x):
+    return jax.nn.softplus(x) - jnp.log(2.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class SchNetConfig:
+    name: str = "schnet"
+    n_interactions: int = 3
+    d_hidden: int = 64
+    n_rbf: int = 300
+    cutoff: float = 10.0
+    out_dim: int = 1
+
+
+class SchNet:
+    def __init__(self, cfg: SchNetConfig, d_feat: int | None = None):
+        self.cfg = cfg
+        self.d_feat = d_feat
+
+    def init(self, key):
+        cfg = self.cfg
+        h = cfg.d_hidden
+        ks = jax.random.split(key, cfg.n_interactions * 3 + 2)
+        params = {
+            "input": node_input_params(ks[0], h, self.d_feat),
+            "readout": mlp_init(ks[1], [h, h // 2, cfg.out_dim]),
+            "layers": [],
+        }
+        for i in range(cfg.n_interactions):
+            params["layers"].append({
+                "filter": mlp_init(ks[2 + 3 * i], [cfg.n_rbf, h, h]),
+                "in_lin": mlp_init(ks[3 + 3 * i], [h, h]),
+                "out_mlp": mlp_init(ks[4 + 3 * i], [h, h, h]),
+            })
+        return params
+
+    def forward(self, params, batch):
+        cfg = self.cfg
+        n = (batch["feats"].shape[0] if "feats" in batch
+             else batch["species"].shape[0])
+        src, dst = batch["edge_src"], batch["edge_dst"]
+        d = jnp.linalg.norm(batch["pos"][src] - batch["pos"][dst], axis=-1)
+        rbf = gaussian_basis(d, cfg.n_rbf, cfg.cutoff)       # (m, n_rbf)
+        cut = poly_cutoff(d, cfg.cutoff)[..., None]
+        x = node_input_embed(params["input"], batch, cfg.d_hidden)
+        for lyr in params["layers"]:
+            w = mlp_apply(lyr["filter"], rbf, act=shifted_softplus) * cut
+            hsrc = mlp_apply(lyr["in_lin"], x)[src]
+            msg = segment_sum(hsrc * w, dst, n)
+            x = x + mlp_apply(lyr["out_mlp"], msg, act=shifted_softplus)
+        return mlp_apply(params["readout"], x, act=shifted_softplus)
+
+    def loss(self, params, batch):
+        out = self.forward(params, batch)
+        if "energy" in batch:
+            out = jnp.sum(out[..., 0], axis=-1)
+        return graph_loss(out, batch)

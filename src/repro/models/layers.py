@@ -1,0 +1,317 @@
+"""Transformer building blocks: RMSNorm, RoPE, GQA attention (full /
+chunked-local / decode), SwiGLU FFN, and capacity-based sparse MoE.
+
+All functions are pure; parameters are plain dicts of arrays.  Compute is
+bf16 with fp32 master weights (cast at use), fp32 softmax/normalization.
+Sharding is expressed once, at parameter creation, through a PartitionSpec
+attached per leaf (see transformer.param_specs) — activations get a small
+number of with_sharding_constraint pins and XLA SPMD propagates the rest.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops as kops
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    qk_norm: bool = False
+    # MoE
+    moe: bool = False
+    n_experts: int = 0
+    top_k: int = 0
+    moe_dense_residual: bool = False   # arctic: parallel dense FFN branch
+    moe_shared_expert: bool = False    # llama4: always-on shared expert
+    capacity_factor: float = 1.25
+    # attention structure
+    attention: str = "full"            # "full" | "chunked"
+    chunk_size: int = 8192
+    layer_group: int = 1               # llama4: 4 (3 chunked + 1 global)
+    rope_theta: float = 1e6
+    # numerics / memory
+    compute_dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.float32
+    remat: bool = True
+    # unroll the layer scan (dry-run cost extrapolation uses this: XLA's
+    # cost_analysis counts a while body once, an unrolled body per layer)
+    scan_unroll: bool = False
+
+    @property
+    def q_dim(self):
+        return self.n_heads * self.d_head
+
+    @property
+    def kv_dim(self):
+        return self.n_kv_heads * self.d_head
+
+    def param_count(self) -> int:
+        """Total parameters (for MODEL_FLOPS = 6·N·D accounting)."""
+        d, f, v = self.d_model, self.d_ff, self.vocab
+        attn = d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+        if self.moe:
+            ffn = self.n_experts * 3 * d * f
+            ffn += d * self.n_experts                    # router
+            if self.moe_dense_residual or self.moe_shared_expert:
+                ffn += 3 * d * f
+        else:
+            ffn = 3 * d * f
+        per_layer = attn + ffn + 2 * d                  # two norms
+        return self.n_layers * per_layer + 2 * v * d + d
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top_k experts + dense branches)."""
+        if not self.moe:
+            return self.param_count()
+        d, f = self.d_model, self.d_ff
+        attn = d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+        ffn = self.top_k * 3 * d * f + d * self.n_experts
+        if self.moe_dense_residual or self.moe_shared_expert:
+            ffn += 3 * d * f
+        per_layer = attn + ffn + 2 * d
+        return self.n_layers * per_layer + 2 * self.vocab * d + d
+
+
+# ---------------------------------------------------------------- numerics
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    """RMSNorm with f32 *accumulation* but no f32 materialization of the
+    activation (einsum contraction carries the precision; the full-size
+    multiplies stay in the compute dtype — one HBM pass instead of four)."""
+    d = x.shape[-1]
+    var = jnp.einsum("...d,...d->...", x, x,
+                     preferred_element_type=jnp.float32)[..., None] / d
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * scale.astype(x.dtype)
+
+
+def rope(x, positions, theta: float):
+    """x: (..., S, H, D); positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # S,1,half
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+# --------------------------------------------------------------- attention
+
+
+def _split_heads(x, n_heads, d_head):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n_heads, d_head)
+
+
+def attention(params, cfg: LMConfig, x, positions, *, chunked: bool,
+              kv_cache=None, cache_pos=None, axes=None):
+    """GQA attention.
+
+    Training/prefill: kv_cache None -> causal over x itself; returns
+    (out, (k, v)) with k/v shaped (B, S, Hkv, Dh).
+    Decode: kv_cache = (k, v) over S_cache positions, x is (B, 1, D),
+    cache_pos scalar index of the new token; returns (out, (k, v)) updated.
+    ``axes``: MeshAxes — when set, attention compute is sharded over heads
+    (q heads repeated from kv; head counts not divisible by |tp| are padded
+    by GSPMD — flagged in the roofline notes).
+    """
+    dt = cfg.compute_dtype
+    b, s, _ = x.shape
+    q = _split_heads(x @ params["wq"].astype(dt), cfg.n_heads, cfg.d_head)
+    k = _split_heads(x @ params["wk"].astype(dt), cfg.n_kv_heads, cfg.d_head)
+    v = _split_heads(x @ params["wv"].astype(dt), cfg.n_kv_heads, cfg.d_head)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"])
+        k = rms_norm(k, params["k_norm"])
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    if axes is not None and kv_cache is None:
+        import jax.lax as lax
+        from jax.sharding import PartitionSpec as P
+        hspec = P(axes.dp, None, axes.tp, None)
+        # flat-head layout: repeat kv to q heads so every tensor in the
+        # attention shards 16-way on the head axis
+        g = cfg.n_heads // cfg.n_kv_heads
+        if g > 1:
+            k = jnp.repeat(k, g, axis=2)
+            v = jnp.repeat(v, g, axis=2)
+        q = lax.with_sharding_constraint(q, hspec)
+        k = lax.with_sharding_constraint(k, hspec)
+        v = lax.with_sharding_constraint(v, hspec)
+
+    if kv_cache is None:
+        if chunked and s > cfg.chunk_size:
+            out = _chunked_causal(q, k, v, cfg)
+        else:
+            out = _causal(q, k, v)
+        # un-repeat for the returned cache (repeat is [h0,h0,h1,h1,...])
+        g_ = cfg.n_heads // cfg.n_kv_heads
+        new_kv = (k[:, :, ::g_], v[:, :, ::g_]) \
+            if (axes is not None and g_ > 1) else (k, v)
+    else:
+        ck, cv = kv_cache              # (B, S_c, Hkv, Dh)
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                          (0, cache_pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                          (0, cache_pos, 0, 0))
+        if chunked:
+            # local layers attend within the CURRENT chunk (chunk-aligned,
+            # iRoPE semantics), not a sliding window
+            s_c = ck.shape[1]
+            span = min(cfg.chunk_size, s_c)
+            start = jnp.minimum((cache_pos // cfg.chunk_size)
+                                * cfg.chunk_size, s_c - span)
+            wk_ = jax.lax.dynamic_slice(ck, (0, start, 0, 0),
+                                        (b, span, ck.shape[2], ck.shape[3]))
+            wv_ = jax.lax.dynamic_slice(cv, (0, start, 0, 0),
+                                        (b, span, cv.shape[2], cv.shape[3]))
+            valid = (start + jnp.arange(span)) <= cache_pos
+            out = _decode_attend(q, wk_, wv_, valid)
+        else:
+            valid = jnp.arange(ck.shape[1]) <= cache_pos
+            out = _decode_attend(q, ck, cv, valid)
+        new_kv = (ck, cv)
+
+    out = out.reshape(b, s, cfg.q_dim)
+    return out @ params["wo"].astype(dt), new_kv
+
+
+def _causal(q, k, v):
+    """(B, S, H, D) GQA causal attention (fp32 softmax)."""
+    out = kops.flash_attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=True)
+    return out.transpose(0, 2, 1, 3)
+
+
+def _chunked_causal(q, k, v, cfg):
+    """Local (chunked) causal attention: queries attend only within their
+    own chunk (iRoPE-style local layers).  Sequences not divisible by the
+    chunk are padded at the end (causality keeps real queries clean)."""
+    b, s, h, d = q.shape
+    c = cfg.chunk_size
+    pad = (-s) % c
+    if pad:
+        padfn = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q, k, v = padfn(q), padfn(k), padfn(v)
+    sp = s + pad
+    nc = sp // c
+    rs = lambda t: t.reshape(b, nc, c, t.shape[2], d).reshape(
+        b * nc, c, t.shape[2], d)
+    out = _causal(rs(q), rs(k), rs(v))
+    out = out.reshape(b, nc, c, h, d).reshape(b, sp, h, d)
+    return out[:, :s]
+
+
+def _decode_attend(q, k, v, valid):
+    """q: (B, 1, Hq, D); k/v: (B, S, Hkv, D); valid: (S,) bool mask.
+
+    No f32 materialization of the cache: einsums accumulate in f32 over
+    the bf16 operands (an f32 cast of a 32k cache doubles the decode
+    step's HBM reads AND the cross-shard gathers — §Perf C iteration 4)."""
+    b, one, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qf = q.reshape(b, hkv, g, d)
+    s = jnp.einsum("bkgd,bskd->bkgs", qf, k,
+                   preferred_element_type=jnp.float32) / math.sqrt(d)
+    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, hq, d).astype(q.dtype)
+
+
+# -------------------------------------------------------------------- FFN
+
+
+def swiglu(params, x, dt):
+    gate = jax.nn.silu(x @ params["w_gate"].astype(dt))
+    up = x @ params["w_up"].astype(dt)
+    return (gate * up) @ params["w_down"].astype(dt)
+
+
+def moe_ffn(params, cfg: LMConfig, x):
+    """Capacity-based top-k MoE with sort-free position assignment.
+
+    x: (B, S, D) -> (B, S, D).  Token dispatch uses argsort by expert id +
+    searchsorted ranks — O(T·k log) bookkeeping, grouped GEMMs of shape
+    (E, C, D) @ (E, D, F) so HLO FLOPs ≈ the true active-expert compute
+    (tokens·top_k·capacity_factor), never the dense all-expert product.
+    """
+    dt = cfg.compute_dtype
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    # capacity floor keeps tiny (decode) batches dropless; at scale the
+    # statistical capacity_factor governs (floor tunable via perf_flags)
+    floor = 8
+    try:
+        from ..launch.perf_flags import FLAGS
+        if FLAGS.moe_decode_capacity_floor is not None:
+            floor = FLAGS.moe_decode_capacity_floor
+    except ImportError:
+        pass
+    cap = max(int(cfg.capacity_factor * t * k / e), min(t * k, floor), 1)
+
+    xf = x.reshape(t, d)
+    logits = (xf @ params["router"].astype(dt)).astype(jnp.float32)  # (T, E)
+    gates = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(gates, k)                  # (T, k)
+    top_w = top_w / jnp.clip(jnp.sum(top_w, -1, keepdims=True), 1e-9)
+
+    flat_e = top_e.reshape(-1)                              # (T*k,)
+    order = jnp.argsort(flat_e)                             # stable
+    sorted_e = flat_e[order]
+    # rank within expert = index - first index of that expert in sorted order
+    first = jnp.searchsorted(sorted_e, jnp.arange(e), side="left")
+    pos_sorted = jnp.arange(t * k) - first[sorted_e]
+    pos = jnp.zeros((t * k,), jnp.int32).at[order].set(
+        pos_sorted.astype(jnp.int32))                       # unsorted rank
+    keep = pos < cap
+
+    tok_idx = jnp.repeat(jnp.arange(t), k)
+    buf = jnp.zeros((e, cap, d), dt)
+    buf = buf.at[flat_e, jnp.where(keep, pos, 0)].add(
+        jnp.where(keep[:, None], xf[tok_idx], 0).astype(dt))
+
+    # grouped expert GEMMs (E, C, D) x (E, D, F)
+    gate_h = jax.nn.silu(jnp.einsum(
+        "ecd,edf->ecf", buf, params["w_gate"].astype(dt)))
+    up_h = jnp.einsum("ecd,edf->ecf", buf, params["w_up"].astype(dt))
+    out_buf = jnp.einsum("ecf,efd->ecd", gate_h * up_h,
+                         params["w_down"].astype(dt))
+
+    gathered = out_buf[flat_e, jnp.where(keep, pos, 0)]     # (T*k, D)
+    w = jnp.where(keep, top_w.reshape(-1), 0.0).astype(dt)
+    combined = jax.ops.segment_sum(gathered * w[:, None], tok_idx,
+                                   num_segments=t)
+    out = combined.reshape(b, s, d).astype(dt)
+
+    if cfg.moe_dense_residual or cfg.moe_shared_expert:
+        out = out + swiglu(params["dense"], x.reshape(b, s, d), dt)
+
+    # load-balancing auxiliary loss (Switch-style)
+    me = jnp.mean(jax.nn.one_hot(top_e[:, 0], e, dtype=jnp.float32), axis=0)
+    ce = jnp.mean(gates, axis=0)
+    aux = e * jnp.sum(me * ce)
+    return out, aux

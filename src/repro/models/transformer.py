@@ -1,0 +1,302 @@
+"""Decoder-only LM (dense + MoE) with scan-over-layers, remat, KV-cache
+serving, and mesh sharding rules.
+
+Parameters are a plain pytree; layer weights are stacked on a leading L axis
+and consumed by ``lax.scan`` in groups of ``cfg.layer_group`` (llama4: 3
+chunked-local layers + 1 global per group).  Sharding is FSDP (params/opt
+sharded over the data axes, gathered per layer by XLA) × TP (model axis on
+head/ffn dims) × EP (experts on the model axis), with `pod` folded into the
+data axes — see param_specs().
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .layers import LMConfig, attention, moe_ffn, rms_norm, swiglu
+
+__all__ = ["LM", "MeshAxes", "make_train_step"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshAxes:
+    """Logical -> physical mesh axis names."""
+    dp: tuple[str, ...] = ("data",)      # batch / fsdp axes ("pod","data")
+    tp: str = "model"
+
+    @property
+    def fsdp(self):
+        return self.dp
+
+
+class LM:
+    def __init__(self, cfg: LMConfig, axes: MeshAxes | None = None):
+        """``axes``: when set (mesh context active), activations get
+        with_sharding_constraint pins (embed/hidden on dp, logits vocab on
+        tp) — the MaxText-style activation sharding."""
+        self.cfg = cfg
+        self.axes = axes
+        assert cfg.n_layers % cfg.layer_group == 0
+
+    def _constrain(self, x, spec):
+        if self.axes is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, spec)
+
+    # ------------------------------------------------------------- params
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        pd = cfg.param_dtype
+        k = jax.random.split(key, 16)
+        d, L = cfg.d_model, cfg.n_layers
+
+        def w(key, *shape, scale=None):
+            scale = scale or (1.0 / (shape[-2] ** 0.5 if len(shape) > 1 else 1))
+            return (jax.random.normal(key, shape, jnp.float32) * scale
+                    ).astype(pd)
+
+        attn = {
+            "wq": w(k[0], L, d, cfg.q_dim),
+            "wk": w(k[1], L, d, cfg.kv_dim),
+            "wv": w(k[2], L, d, cfg.kv_dim),
+            "wo": w(k[3], L, cfg.q_dim, d),
+        }
+        if cfg.qk_norm:
+            attn["q_norm"] = jnp.ones((L, cfg.d_head), pd)
+            attn["k_norm"] = jnp.ones((L, cfg.d_head), pd)
+        blocks = {
+            "attn": attn,
+            "ln1": jnp.ones((L, d), pd),
+            "ln2": jnp.ones((L, d), pd),
+        }
+        if cfg.moe:
+            moe = {
+                "router": w(k[4], L, d, cfg.n_experts),
+                "w_gate": w(k[5], L, cfg.n_experts, d, cfg.d_ff),
+                "w_up": w(k[6], L, cfg.n_experts, d, cfg.d_ff),
+                "w_down": w(k[7], L, cfg.n_experts, cfg.d_ff, d),
+            }
+            if cfg.moe_dense_residual or cfg.moe_shared_expert:
+                moe["dense"] = {
+                    "w_gate": w(k[8], L, d, cfg.d_ff),
+                    "w_up": w(k[9], L, d, cfg.d_ff),
+                    "w_down": w(k[10], L, cfg.d_ff, d),
+                }
+            blocks["moe"] = moe
+        else:
+            blocks["ffn"] = {
+                "w_gate": w(k[8], L, d, cfg.d_ff),
+                "w_up": w(k[9], L, d, cfg.d_ff),
+                "w_down": w(k[10], L, cfg.d_ff, d),
+            }
+        return {
+            "embed": w(k[11], cfg.vocab, d, scale=0.02),
+            "out_head": w(k[12], d, cfg.vocab),
+            "final_norm": jnp.ones((d,), pd),
+            "blocks": blocks,
+        }
+
+    def abstract_params(self):
+        return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))
+
+    def param_specs(self, axes: MeshAxes = MeshAxes()):
+        """PartitionSpec per parameter leaf (FSDP × TP × EP)."""
+        fsdp, tp = axes.fsdp, axes.tp
+
+        def spec_for(path: str, leaf) -> P:
+            nd = leaf.ndim
+            if path.endswith(("ln1", "ln2", "final_norm", "q_norm", "k_norm")):
+                return P(*([None] * nd))
+            if path.endswith("embed"):
+                return P(tp, None)      # vocab-sharded; d replicated (the
+                # d-dim FSDP variant forces a gather under the logits
+                # matmul's batch sharding — measured 6x temp blow-up)
+            if path.endswith("out_head"):
+                return P(None, tp)
+            if path.endswith("router"):
+                return P(None, fsdp, None)
+            if ".moe." in path or path.endswith(
+                    ("moe.w_gate", "moe.w_up", "moe.w_down")):
+                if "dense" in path:  # (L, d, f) / (L, f, d) dense branch
+                    if path.endswith("w_down"):
+                        return P(None, tp, fsdp)
+                    return P(None, fsdp, tp)
+                if path.endswith("w_down"):     # (L, E, F, D)
+                    return P(None, tp, None, fsdp)
+                return P(None, tp, fsdp, None)  # (L, E, D, F)
+            # dense attn / ffn mats (L, in, out)
+            if path.endswith(("wo", "w_down")):
+                return P(None, tp, fsdp)
+            return P(None, fsdp, tp)
+
+        flat = jax.tree_util.tree_flatten_with_path(self.abstract_params())
+        paths = {}
+        for kp, leaf in flat[0]:
+            name = ".".join(
+                p.key if hasattr(p, "key") else str(p) for p in kp)
+            paths[name] = spec_for(name, leaf)
+        # rebuild tree with same structure
+        specs = jax.tree_util.tree_unflatten(
+            flat[1], [paths[".".join(
+                p.key if hasattr(p, "key") else str(p) for p in kp)]
+                for kp, _ in flat[0]])
+        return specs
+
+    # ------------------------------------------------------------ helpers
+    def _layer_types(self):
+        g = self.cfg.layer_group
+        if g == 1:
+            return (self.cfg.attention == "chunked",)
+        # llama4 iRoPE grouping: local, local, local, global
+        return tuple(i < g - 1 for i in range(g))
+
+    def _group_params(self, blocks):
+        g = self.cfg.layer_group
+        return jax.tree.map(
+            lambda a: a.reshape(a.shape[0] // g, g, *a.shape[1:]), blocks)
+
+    def _block(self, lp, x, positions, chunked, kv_cache=None, cache_pos=None):
+        cfg = self.cfg
+        h, kv = attention(lp["attn"], cfg, rms_norm(x, lp["ln1"]), positions,
+                          chunked=chunked, kv_cache=kv_cache,
+                          cache_pos=cache_pos, axes=self.axes)
+        x = x + h
+        if cfg.moe:
+            ff, aux = moe_ffn(lp["moe"], cfg, rms_norm(x, lp["ln2"]))
+        else:
+            ff = swiglu(lp["ffn"], rms_norm(x, lp["ln2"]), cfg.compute_dtype)
+            aux = jnp.zeros((), jnp.float32)
+        return x + ff, aux, kv
+
+    # ------------------------------------------------------------ forward
+    def forward(self, params, tokens, *, collect_cache: bool = False):
+        """tokens (B, S) -> logits (B, S, V) [f32], aux loss, optional cache."""
+        cfg = self.cfg
+        dt = cfg.compute_dtype
+        b, s = tokens.shape
+        x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+        if self.axes is not None:
+            x = self._constrain(x, P(self.axes.dp, None, None))
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+        types = self._layer_types()
+        g = cfg.layer_group
+
+        def group_body(x, gp):
+            aux_total = jnp.zeros((), jnp.float32)
+            kvs = []
+            for i in range(g):
+                lp = jax.tree.map(lambda a: a[i], gp)
+                x, aux, kv = self._block(lp, x, positions, chunked=types[i])
+                aux_total = aux_total + aux
+                kvs.append(kv)
+            ks = jnp.stack([kv[0] for kv in kvs]).astype(dt)
+            vs = jnp.stack([kv[1] for kv in kvs]).astype(dt)
+            return x, (aux_total, (ks, vs) if collect_cache else None)
+
+        body = group_body
+        if cfg.remat:
+            body = jax.checkpoint(
+                group_body,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+        x, (auxes, caches) = jax.lax.scan(
+            body, x, self._group_params(params["blocks"]),
+            unroll=True if cfg.scan_unroll else 1)
+        x = rms_norm(x, params["final_norm"])
+        logits = (x @ params["out_head"].astype(dt)).astype(jnp.float32)
+        if self.axes is not None:
+            logits = self._constrain(
+                logits, P(self.axes.dp, None, self.axes.tp))
+        aux = jnp.sum(auxes)
+        if collect_cache:
+            ks, vs = caches   # (L/g, g, B, S, Hkv, Dh)
+            ks = ks.reshape(cfg.n_layers, *ks.shape[2:])
+            vs = vs.reshape(cfg.n_layers, *vs.shape[2:])
+            return logits, aux, (ks, vs)
+        return logits, aux, None
+
+    # --------------------------------------------------------------- loss
+    def loss(self, params, batch):
+        logits, aux, _ = self.forward(params, batch["tokens"])
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        # one-hot contraction instead of take_along_axis: a gather over the
+        # vocab-sharded axis would force a full all-gather of the logits;
+        # the one-hot multiply-reduce fuses and reduces over the shard.
+        onehot = jax.nn.one_hot(batch["targets"], logits.shape[-1],
+                                dtype=logits.dtype)
+        tgt = jnp.sum(logits * onehot, axis=-1)
+        nll = jnp.mean(logz - tgt)
+        return nll + 0.01 * aux, {"nll": nll, "aux": aux}
+
+    # ------------------------------------------------------------ serving
+    def prefill(self, params, tokens):
+        """Returns (last-token logits (B, V), cache (k, v): (L,B,S,Hkv,Dh))."""
+        logits, _, cache = self.forward(params, tokens, collect_cache=True)
+        return logits[:, -1], cache
+
+    def decode_step(self, params, cache, token, pos):
+        """token (B, 1) int32; pos scalar int32 — position being written.
+
+        Returns (logits (B, V), updated cache).
+        """
+        cfg = self.cfg
+        dt = cfg.compute_dtype
+        b = token.shape[0]
+        x = jnp.take(params["embed"], token, axis=0).astype(dt)
+        positions = jnp.broadcast_to(pos[None, None], (b, 1))
+        types = self._layer_types()
+        g = cfg.layer_group
+
+        def group_body(x, inputs):
+            gp, (ck, cv) = inputs   # ck: (g, B, S, Hkv, Dh)
+            new_k, new_v = [], []
+            for i in range(g):
+                lp = jax.tree.map(lambda a: a[i], gp)
+                x, _, kv = self._block(lp, x, positions, chunked=types[i],
+                                       kv_cache=(ck[i], cv[i]), cache_pos=pos)
+                new_k.append(kv[0])
+                new_v.append(kv[1])
+            return x, (jnp.stack(new_k), jnp.stack(new_v))
+
+        ks, vs = cache
+        ng = cfg.n_layers // g
+        ks_g = ks.reshape(ng, g, *ks.shape[1:])
+        vs_g = vs.reshape(ng, g, *vs.shape[1:])
+        x, (nks, nvs) = jax.lax.scan(
+            group_body, x, (self._group_params(params["blocks"]),
+                            (ks_g, vs_g)),
+            unroll=True if cfg.scan_unroll else 1)
+        x = rms_norm(x, params["final_norm"])
+        logits = (x[:, 0] @ params["out_head"].astype(dt)).astype(jnp.float32)
+        if self.axes is not None:
+            bspec = self.axes.dp if logits.shape[0] > 1 else None
+            logits = self._constrain(logits, P(bspec, self.axes.tp))
+        nks = nks.reshape(cfg.n_layers, *nks.shape[2:])
+        nvs = nvs.reshape(cfg.n_layers, *nvs.shape[2:])
+        return logits, (nks, nvs)
+
+    # -------------------------------------------------- sharding of state
+    def cache_specs(self, axes: MeshAxes = MeshAxes(),
+                    shard_seq: bool = False):
+        """(k, v) cache: (L, B, S, Hkv, Dh). Batch on dp normally; for
+        batch=1 long-context decode, shard the sequence axis instead
+        (context parallelism)."""
+        if shard_seq:
+            s = P(None, None, axes.dp, None, None)
+        else:
+            s = P(None, axes.dp, None, None, None)
+        return (s, s)
+
+
+def make_train_step(model: LM, optimizer):
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss, has_aux=True)(params, batch)
+        new_params, new_state = optimizer.update(grads, opt_state, params)
+        metrics = dict(metrics, loss=loss)
+        return new_params, new_state, metrics
+    return train_step

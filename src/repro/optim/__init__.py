@@ -1,0 +1,5 @@
+from .adamw import (AdamW, AdamWState, HybridAdamW, cosine_schedule,
+                    global_norm)
+
+__all__ = ["AdamW", "AdamWState", "HybridAdamW", "cosine_schedule",
+           "global_norm"]

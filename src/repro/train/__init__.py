@@ -1,0 +1,5 @@
+from . import checkpoint, compression, fault, pipeline
+from .trainer import Trainer, TrainerConfig
+
+__all__ = ["checkpoint", "compression", "fault", "pipeline", "Trainer",
+           "TrainerConfig"]

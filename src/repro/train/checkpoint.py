@@ -1,0 +1,142 @@
+"""Sharded checkpointing with reshard-on-restore (elastic restarts).
+
+Layout: ``<dir>/step_<N>/`` with one ``.npy`` per pytree leaf plus a
+``manifest.json`` (leaf paths, shapes, dtypes, step, user metadata).
+Restore takes target *shardings* — a job can restart on a different mesh
+(more/fewer healthy nodes) and every leaf is re-placed with its new
+PartitionSpec: node failure → shrink mesh → restore → continue.
+
+Saving is synchronous by default; ``AsyncCheckpointer`` moves the disk
+write off the critical path (host copy happens inline, write in a
+background thread) — the standard large-scale trick to hide checkpoint
+latency behind the next train steps.
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for kp, leaf in flat:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in kp)
+        out[name] = leaf
+    return out, treedef
+
+
+def save(ckpt_dir: str, step: int, tree, metadata: dict | None = None):
+    """Write a checkpoint; returns its path. Atomic via tmp-dir rename."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = path + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    leaves, _ = _flatten(tree)
+    manifest = {"step": step, "metadata": metadata or {}, "leaves": {}}
+    for name, leaf in leaves.items():
+        arr = np.asarray(leaf)
+        fname = name.replace("/", "__") + ".npy"
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"][name] = {
+            "file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype)}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.rename(tmp, path)
+    return path
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, like, step: int | None = None,
+            shardings=None):
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs).  ``shardings``: optional matching pytree of
+    Shardings — leaves are device_put with them (reshard-on-restore)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    like_leaves, treedef = _flatten(like)
+    shard_leaves = None
+    if shardings is not None:
+        shard_leaves, _ = _flatten(shardings)
+    out = []
+    for name in like_leaves:
+        info = manifest["leaves"][name]
+        arr = np.load(os.path.join(path, info["file"]))
+        if shard_leaves is not None:
+            arr = jax.device_put(arr, shard_leaves[name])
+        out.append(arr)
+    tree = jax.tree_util.tree_unflatten(treedef, out)
+    return tree, manifest["step"], manifest["metadata"]
+
+
+def prune(ckpt_dir: str, keep: int = 3):
+    if not os.path.isdir(ckpt_dir):
+        return
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
+                      ignore_errors=True)
+
+
+class AsyncCheckpointer:
+    """Background-thread checkpoint writer (host copy inline, IO async)."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._q: queue.Queue = queue.Queue()
+        self._err: Exception | None = None
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            step, host_tree, metadata = item
+            try:
+                save(self.ckpt_dir, step, host_tree, metadata)
+                prune(self.ckpt_dir, self.keep)
+            except Exception as e:      # surfaced on wait()
+                self._err = e
+            finally:
+                self._q.task_done()
+
+    def save(self, step: int, tree, metadata: dict | None = None):
+        # host copy now (device buffers may be donated by the next step)
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+        self._q.put((step, host_tree, metadata))
+
+    def wait(self):
+        self._q.join()
+        if self._err:
+            raise self._err
+
+    def close(self):
+        self.wait()
+        self._q.put(None)
+        self._thread.join()

@@ -1,0 +1,83 @@
+"""Gradient compression for cross-pod data parallelism: int8 quantization
+with error feedback (1-bit-Adam-style residual correction).
+
+At 512+ chips the pod-level gradient all-reduce crosses the slow inter-pod
+links; quantizing to int8 cuts that traffic 4× (bf16) with negligible
+quality loss when the quantization error is fed back into the next step's
+gradient.  Usage is functional:
+
+    comp_state = init_error_feedback(grads)
+    grads_q, comp_state = compress_with_feedback(grads, comp_state)
+    # grads_q flows into the optimizer / DP reduction
+
+For explicit shard_map DP loops, ``compressed_psum`` performs the quantize
+→ psum(int32) → dequantize sequence along an axis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(x):
+    """Per-tensor symmetric int8. Returns (q, scale)."""
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_feedback(grads):
+    return jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads)
+
+
+def compress_with_feedback(grads, err_state):
+    """Quantize each leaf, carrying the quantization residual forward."""
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, s = quantize(corrected)
+        deq = dequantize(q, s)
+        return deq.astype(g.dtype), corrected - deq
+    pairs = jax.tree.map(one, grads, err_state)
+    new_grads = jax.tree.map(lambda p: p[0], pairs,
+                             is_leaf=lambda x: isinstance(x, tuple))
+    new_err = jax.tree.map(lambda p: p[1], pairs,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    return new_grads, new_err
+
+
+def compressed_psum(x, axis_name: str, axis_size: int):
+    """int8-compressed all-reduce along a mesh axis (inside shard_map).
+
+    Two-phase reduce-scatter/all-gather with int8 on the wire:
+      1. shared scale via pmax (scalar collective),
+      2. all_to_all of int8 chunks (n bytes on the wire),
+      3. local int32 accumulation,
+      4. all_gather of requantized int8 chunks (n bytes).
+    Total ≈ 2n bytes vs ≈ 4n for a bf16 ring all-reduce → 2× traffic cut;
+    the end-to-end quantization error is what error feedback absorbs.
+    """
+    shape = x.shape
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    pad = (-n) % axis_size
+    flat = jnp.pad(flat, (0, pad))
+    # 1. shared scale so every shard's int8 grid matches
+    scale = jax.lax.pmax(jnp.max(jnp.abs(flat)), axis_name) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(flat / scale), -127, 127).astype(jnp.int8)
+    chunks = q.reshape(axis_size, -1)
+    # 2. exchange: device d receives chunk d from everyone
+    recv = jax.lax.all_to_all(chunks, axis_name, split_axis=0,
+                              concat_axis=0, tiled=False)
+    # 3. local exact accumulation of the owned chunk
+    part = jnp.sum(recv.astype(jnp.int32), axis=0)          # (chunk,)
+    scale2 = scale * axis_size
+    q2 = jnp.clip(jnp.round(part.astype(jnp.float32)
+                            * (scale / scale2)), -127, 127).astype(jnp.int8)
+    # 4. gather the reduced chunks back
+    full = jax.lax.all_gather(q2, axis_name, tiled=True)    # (n_pad,)
+    out = full.astype(jnp.float32) * scale2
+    return out[:n].reshape(shape)

@@ -1,0 +1,106 @@
+"""Fault tolerance at cluster scale: straggler detection and elastic
+mesh management.
+
+JAX's single-controller SPMD model means a slow/failed worker manifests as
+(a) elongated step times (straggler) or (b) a failed collective (hard
+fault).  The policies here are the launcher-side logic:
+
+  StragglerMonitor  — rolling per-step timing; flags steps slower than
+                      ``threshold ×`` the rolling median; escalation after
+                      ``patience`` consecutive flags (the signal used to
+                      evict a slow host and trigger an elastic restart).
+  ElasticManager    — owns the device→mesh mapping; on failure (or resize)
+                      builds the largest valid mesh from surviving devices
+                      and replays the latest checkpoint onto it via
+                      checkpoint.restore(shardings=...).  Data-iterator
+                      state rides in checkpoint metadata, so the batch
+                      sequence is exactly reproducible across restarts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+
+import jax
+import numpy as np
+
+from . import checkpoint as ckpt_lib
+
+
+class StragglerMonitor:
+    def __init__(self, window: int = 50, threshold: float = 2.0,
+                 patience: int = 3):
+        self.window = window
+        self.threshold = threshold
+        self.patience = patience
+        self.times: deque[float] = deque(maxlen=window)
+        self._consecutive = 0
+        self.flagged_steps: list[int] = []
+        self._step = 0
+        self._t0: float | None = None
+
+    def start_step(self):
+        self._t0 = time.perf_counter()
+
+    def end_step(self) -> str:
+        """Returns action: 'ok' | 'warn' | 'escalate'."""
+        dt = time.perf_counter() - self._t0
+        self._step += 1
+        action = self.observe(dt)
+        return action
+
+    def observe(self, step_time: float) -> str:
+        median = float(np.median(self.times)) if len(self.times) >= 5 else None
+        self.times.append(step_time)
+        if median is None:
+            return "ok"
+        if step_time > self.threshold * median:
+            self._consecutive += 1
+            self.flagged_steps.append(self._step)
+            if self._consecutive >= self.patience:
+                self._consecutive = 0
+                return "escalate"
+            return "warn"
+        self._consecutive = 0
+        return "ok"
+
+    @property
+    def median(self) -> float | None:
+        return float(np.median(self.times)) if self.times else None
+
+
+@dataclasses.dataclass
+class ElasticManager:
+    """Rebuilds meshes over surviving devices and replays checkpoints."""
+    ckpt_dir: str
+    model_axis_size: int = 1           # model-parallel degree to preserve
+
+    def usable_mesh(self, devices=None, failed: set[int] = frozenset()):
+        devices = list(devices if devices is not None else jax.devices())
+        healthy = [d for d in devices if d.id not in failed]
+        tp = self.model_axis_size
+        dp = len(healthy) // tp
+        if dp < 1:
+            raise RuntimeError("not enough healthy devices for model axis")
+        healthy = healthy[: dp * tp]
+        arr = np.array(healthy).reshape(dp, tp)
+        return jax.sharding.Mesh(arr, ("data", "model"))
+
+    def restore_onto(self, mesh, like, spec_fn):
+        """Restore latest checkpoint resharded onto ``mesh``.
+
+        spec_fn: pytree-of-PartitionSpec factory (same structure as
+        ``like``)."""
+        from jax.sharding import NamedSharding
+        specs = spec_fn()
+        shardings = jax.tree.map(
+            lambda s: NamedSharding(mesh, s), specs,
+            is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+        return ckpt_lib.restore(self.ckpt_dir, like, shardings=shardings)
+
+    def handle_failure(self, failed_ids: set[int], like, spec_fn):
+        """Full elastic recovery path: shrink mesh, replay checkpoint."""
+        mesh = self.usable_mesh(failed=failed_ids)
+        tree, step, meta = self.restore_onto(mesh, like, spec_fn)
+        return mesh, tree, step, meta

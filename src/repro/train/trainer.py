@@ -1,0 +1,81 @@
+"""Production trainer: jit'd step, sharded state, periodic async
+checkpointing, straggler monitoring, elastic restore.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from . import checkpoint as ckpt_lib
+from .fault import StragglerMonitor
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    num_steps: int = 100
+    ckpt_dir: str | None = None
+    ckpt_every: int = 50
+    keep: int = 3
+    log_every: int = 10
+
+
+class Trainer:
+    """Single-controller training loop.
+
+    step_fn(params, opt_state, batch) -> (params, opt_state, metrics)
+    stream.batch_at(step) -> host batch dict
+    """
+
+    def __init__(self, step_fn: Callable, params, opt_state, stream,
+                 cfg: TrainerConfig, put_batch: Callable | None = None):
+        self.step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+        self.params = params
+        self.opt_state = opt_state
+        self.stream = stream
+        self.cfg = cfg
+        self.put_batch = put_batch or (lambda b: b)
+        self.monitor = StragglerMonitor()
+        self.ckpt = (ckpt_lib.AsyncCheckpointer(cfg.ckpt_dir, cfg.keep)
+                     if cfg.ckpt_dir else None)
+        self.start_step = 0
+        self.history: list[dict] = []
+        if cfg.ckpt_dir and ckpt_lib.latest_step(cfg.ckpt_dir) is not None:
+            state = {"params": self.params, "opt": self.opt_state}
+            state, step, meta = ckpt_lib.restore(cfg.ckpt_dir, state)
+            self.params, self.opt_state = state["params"], state["opt"]
+            self.start_step = step
+            print(f"[trainer] restored checkpoint at step {step}")
+
+    def run(self):
+        cfg = self.cfg
+        for step in range(self.start_step, cfg.num_steps):
+            batch = self.put_batch(self.stream.batch_at(step))
+            self.monitor.start_step()
+            self.params, self.opt_state, metrics = self.step_fn(
+                self.params, self.opt_state, batch)
+            jax.block_until_ready(metrics)
+            action = self.monitor.end_step()
+            if action == "escalate":
+                print(f"[trainer] step {step}: straggler escalation "
+                      f"(median {self.monitor.median:.3f}s)")
+            rec = {k: float(v) for k, v in metrics.items()}
+            rec["step"] = step
+            self.history.append(rec)
+            if step % cfg.log_every == 0:
+                print(f"[trainer] step {step}: " + ", ".join(
+                    f"{k}={v:.4f}" for k, v in rec.items() if k != "step"))
+            if self.ckpt and (step + 1) % cfg.ckpt_every == 0:
+                self.ckpt.save(step + 1,
+                               {"params": self.params,
+                                "opt": self.opt_state},
+                               metadata={"stream_step": step + 1})
+        if self.ckpt:
+            self.ckpt.save(cfg.num_steps,
+                           {"params": self.params, "opt": self.opt_state},
+                           metadata={"stream_step": cfg.num_steps})
+            self.ckpt.wait()
+        return self.history

@@ -1,0 +1,54 @@
+"""Data pipelines (determinism = elastic reproducibility) and the neighbor
+sampler with trimming integration."""
+import numpy as np
+import pytest
+
+from repro.core import trim
+from repro.data import GraphBatchStream, RecsysStream, TokenStream
+from repro.graphs import NeighborSampler, erdos_renyi, sink_heavy
+
+
+def test_streams_deterministic():
+    s = TokenStream(batch=2, seq=8, vocab=100, seed=3)
+    a = s.batch_at(7)
+    b = s.batch_at(7)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert not (s.batch_at(8)["tokens"] == a["tokens"]).all()
+    r = RecsysStream(batch=4, n_dense=3, n_sparse=2, vocab_sizes=(10, 20),
+                     seed=0)
+    assert r.batch_at(0)["sparse_ids"].shape == (4, 2, 1)
+    g = GraphBatchStream(batch=2, n_nodes=5, n_edges=7)
+    assert g.batch_at(0)["pos"].shape == (2, 5, 3)
+
+
+def test_sampler_shapes_and_locality():
+    g = erdos_renyi(500, 4000, 0)
+    s = NeighborSampler(g, (5, 3), seed=0)
+    blocks = s.sample(np.arange(16))
+    assert len(blocks) == 2
+    # blocks are input-first: last block's dst are the seeds
+    assert (blocks[-1].dst_nodes == np.arange(16)).all()
+    for b in blocks:
+        assert b.neighbors.max() < len(b.src_nodes)
+        # every sampled neighbor is a true graph neighbor
+        ip, ix = g.to_numpy()
+        for i, v in enumerate(b.dst_nodes[:4]):
+            nbrs = set(ix[ip[v]:ip[v + 1]].tolist())
+            sampled = set(b.src_nodes[b.neighbors[i][b.mask[i]]].tolist())
+            assert sampled <= nbrs or not b.mask[i].any()
+
+
+def test_sampler_trim_integration():
+    """With trim=True every sampled universe vertex satisfies the
+    arc-consistency condition (≥1 outgoing edge among allowed)."""
+    g = sink_heavy(2000, 8000, sink_frac=0.8, seed=0)
+    s = NeighborSampler(g, (4,), seed=0, trim=True)
+    assert s.trim_stats["trimmed"] > 0
+    allowed = np.nonzero(s.allowed)[0]
+    ip, ix = g.to_numpy()
+    # allowed vertices have at least one allowed successor
+    for v in allowed[:50]:
+        succ = ix[ip[v]:ip[v + 1]]
+        assert s.allowed[succ].any()
+    for seeds in s.batches(8, 2):
+        assert s.allowed[seeds].all()

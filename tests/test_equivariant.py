@@ -1,0 +1,82 @@
+"""Self-consistency of the numerically-derived equivariant machinery:
+SH orthonormality, the Wigner-D identity SH(Rv) = D(R)·SH(v) to l=6,
+edge alignment, and real-CG intertwiner equivariance."""
+import math
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.models import equivariant as eq
+
+RNG = np.random.default_rng(0)
+
+
+def _rot(a, b, g):
+    Rz = lambda t: np.array([[np.cos(t), -np.sin(t), 0],
+                             [np.sin(t), np.cos(t), 0], [0, 0, 1]])
+    Ry = lambda t: np.array([[np.cos(t), 0, np.sin(t)], [0, 1, 0],
+                             [-np.sin(t), 0, np.cos(t)]])
+    return Rz(a) @ Ry(b) @ Rz(g)
+
+
+def test_sh_orthonormal_montecarlo():
+    v = RNG.normal(size=(200000, 3))
+    v /= np.linalg.norm(v, axis=-1, keepdims=True)
+    Y = eq.sh_np(v, 3)
+    G = (Y.T @ Y) / len(v) * 4 * math.pi
+    assert np.abs(G - np.eye(16)).max() < 0.05
+
+
+def test_wigner_identity_l0_to_6():
+    a, b, g = RNG.uniform(-np.pi, np.pi, 3)
+    R = _rot(a, b, g)
+    v = RNG.normal(size=(50, 3))
+    v /= np.linalg.norm(v, axis=-1, keepdims=True)
+    for l in range(7):
+        D = np.asarray(eq.wigner_d(
+            (jnp.array([a]), jnp.array([b]), jnp.array([g])), l))[0]
+        lhs = eq.sh_np(v @ R.T, l)[..., l * l:(l + 1) ** 2]
+        rhs = eq.sh_np(v, l)[..., l * l:(l + 1) ** 2] @ D.T
+        assert np.abs(lhs - rhs).max() < 1e-4, l
+
+
+def test_edge_alignment():
+    u = RNG.normal(size=(20, 3))
+    u /= np.linalg.norm(u, axis=-1, keepdims=True)
+    for l in range(1, 7):
+        D = np.asarray(eq.wigner_d_align(jnp.asarray(u), l))
+        shu = eq.sh_np(u, l)[..., l * l:(l + 1) ** 2]
+        shz = eq.sh_np(np.array([[0., 0., 1.]]), l)[..., l * l:(l + 1) ** 2]
+        got = np.einsum("eij,ej->ei", D, shu)
+        assert np.abs(got - shz).max() < 1e-4, l
+        Di = np.asarray(eq.wigner_d_align(jnp.asarray(u), l, inverse=True))
+        assert np.abs(np.einsum("eij,ejk->eik", Di, D)
+                      - np.eye(2 * l + 1)).max() < 1e-4
+
+
+def test_real_cg_equivariance():
+    a, b, g = 0.3, 1.1, -0.7
+    Ds = {l: np.asarray(eq.wigner_d(
+        (jnp.array([a]), jnp.array([b]), jnp.array([g])), l))[0]
+        for l in range(3)}
+    for (l1, l2, l3) in [(1, 1, 0), (1, 1, 1), (1, 1, 2), (2, 1, 1),
+                         (2, 2, 2), (2, 2, 0), (0, 0, 0)]:
+        W = eq.real_cg(l1, l2, l3)
+        f1 = RNG.normal(size=(5, 2 * l1 + 1))
+        f2 = RNG.normal(size=(5, 2 * l2 + 1))
+        out = np.einsum("uvw,nu,nv->nw", W, f1, f2)
+        out_rot = np.einsum("uvw,nu,nv->nw", W, f1 @ Ds[l1].T,
+                            f2 @ Ds[l2].T)
+        assert np.abs(out_rot - out @ Ds[l3].T).max() < 1e-6, (l1, l2, l3)
+
+
+def test_cg_triangle_violation_zero():
+    assert np.allclose(eq.real_cg(0, 0, 2), 0.0)
+    assert np.allclose(eq.real_cg(1, 1, 3), 0.0)
+
+
+def test_bessel_cutoff():
+    r = jnp.asarray([0.1, 2.5, 4.999, 5.0, 7.0])
+    rb = np.asarray(eq.bessel_basis(r, 8, 5.0))
+    assert rb.shape == (5, 8)
+    assert np.abs(rb[3:]).max() < 1e-6       # vanishes at/after cutoff

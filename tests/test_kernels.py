@@ -1,0 +1,70 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret
+mode (the TPU target contract)."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.first_live_scan import first_live_scan
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.segment_reduce import segment_sum_pallas
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize(
+    "b,hq,hkv,sq,sk,d,causal,dtype",
+    [
+        (1, 2, 2, 128, 128, 64, True, jnp.float32),
+        (2, 4, 2, 256, 256, 64, True, jnp.float32),
+        (1, 8, 2, 128, 256, 128, False, jnp.float32),
+        (1, 2, 1, 256, 512, 64, True, jnp.float32),   # sk > sq (prefix)
+        (1, 4, 4, 128, 128, 64, True, jnp.bfloat16),
+    ])
+def test_flash_attention(b, hq, hkv, sq, sk, d, causal, dtype):
+    q = jnp.asarray(RNG.normal(size=(b, hq, sq, d)), dtype)
+    k = jnp.asarray(RNG.normal(size=(b, hkv, sk, d)), dtype)
+    v = jnp.asarray(RNG.normal(size=(b, hkv, sk, d)), dtype)
+    got = flash_attention(q, k, v, causal=causal, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=causal)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_attention_chunked_matches_ref():
+    """The jnp flash twin used for dry-run lowering is exact too."""
+    q = jnp.asarray(RNG.normal(size=(2, 4, 64, 32)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(2, 2, 192, 32)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(2, 2, 192, 32)), jnp.float32)
+    got = ref.attention_ref_chunked(q, k, v, causal=True, kv_chunk=64)
+    want = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("m,d,n,be,bn", [
+    (1000, 32, 177, 256, 128),
+    (512, 8, 64, 128, 64),
+    (77, 16, 33, 512, 512),      # smaller than one block
+])
+def test_segment_sum(m, d, n, be, bn):
+    vals = jnp.asarray(RNG.normal(size=(m, d)), jnp.float32)
+    ids = jnp.asarray(RNG.integers(0, n, m), jnp.int32)
+    got = segment_sum_pallas(vals, ids, n, block_e=be, block_n=bn,
+                             interpret=True)
+    want = ref.segment_sum_ref(vals, ids, n)
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("n,W,bv", [(333, 16, 128), (64, 8, 64),
+                                    (1024, 32, 256)])
+def test_first_live_scan(n, W, bv):
+    flags = jnp.asarray(RNG.random((n, W)) < 0.3)
+    valid = jnp.asarray(RNG.random((n, W)) < 0.8)
+    active = jnp.asarray(RNG.random(n) < 0.5)
+    f1, d1 = first_live_scan(flags, valid, active, block_v=bv,
+                             interpret=True)
+    f2, d2 = ref.first_live_ref(flags, valid, active)
+    assert (f1 == f2).all() and (d1 == d2).all()

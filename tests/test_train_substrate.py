@@ -1,0 +1,139 @@
+"""Training substrate: checkpoint save/restore/reshard, async writer,
+trainer resume, straggler monitor, gradient compression, GPipe pipeline
+(subprocess, 8 devices)."""
+import os
+import subprocess
+import sys
+import tempfile
+import textwrap
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.train import checkpoint as ckpt
+from repro.train import compression
+from repro.train.fault import ElasticManager, StragglerMonitor
+
+
+def test_checkpoint_roundtrip_and_prune():
+    with tempfile.TemporaryDirectory() as d:
+        tree = {"a": jnp.arange(6.0).reshape(2, 3),
+                "b": {"c": jnp.ones((4,), jnp.int32)}}
+        for step in (1, 2, 3, 4):
+            ckpt.save(d, step, tree, metadata={"s": step})
+        ckpt.prune(d, keep=2)
+        assert ckpt.latest_step(d) == 4
+        got, step, meta = ckpt.restore(d, tree)
+        assert step == 4 and meta["s"] == 4
+        np.testing.assert_array_equal(got["a"], tree["a"])
+        assert len([x for x in os.listdir(d) if x.startswith("step_")]) == 2
+
+
+def test_async_checkpointer():
+    with tempfile.TemporaryDirectory() as d:
+        ac = ckpt.AsyncCheckpointer(d, keep=2)
+        tree = {"w": jnp.ones((8, 8))}
+        ac.save(1, tree)
+        ac.save(2, tree)
+        ac.wait()
+        assert ckpt.latest_step(d) == 2
+        ac.close()
+
+
+def test_straggler_monitor():
+    mon = StragglerMonitor(window=20, threshold=2.0, patience=2)
+    for _ in range(10):
+        assert mon.observe(1.0) == "ok"
+    assert mon.observe(5.0) == "warn"
+    assert mon.observe(5.0) == "escalate"
+    assert mon.observe(1.0) == "ok"
+
+
+def test_elastic_manager_mesh_shrink():
+    em = ElasticManager(ckpt_dir="/tmp/none", model_axis_size=1)
+    mesh = em.usable_mesh(failed=set())
+    assert mesh.devices.size == len(jax.devices())
+
+
+def test_error_feedback_reduces_bias():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(size=(1000,)), jnp.float32) * 0.1
+    ef = compression.init_error_feedback({"g": g})
+    total_q = jnp.zeros_like(g)
+    for _ in range(20):
+        q, ef = compression.compress_with_feedback({"g": g}, ef)
+        total_q = total_q + q["g"]
+    # accumulated quantized stream converges to accumulated true gradient
+    rel = float(jnp.abs(total_q - 20 * g).max() / jnp.abs(20 * g).max())
+    assert rel < 0.02, rel
+
+
+GPIPE_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np, sys
+    sys.path.insert(0, %r)
+    import jax, jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.train.pipeline import gpipe_apply
+    from repro.train.compression import compressed_psum
+
+    mesh = jax.make_mesh((4, 2), ("stage", "dp"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    S, M, mb, d = 4, 6, 8, 16
+    rng = np.random.default_rng(0)
+    ws = jnp.asarray(rng.normal(size=(S, d, d)) / np.sqrt(d), jnp.float32)
+    xs = jnp.asarray(rng.normal(size=(M, mb, d)), jnp.float32)
+    out = gpipe_apply(lambda w, x: jnp.tanh(x @ w), ws, xs,
+                      mesh=mesh, axis="stage")
+    ref = xs
+    for s in range(S):
+        ref = jnp.tanh(ref @ ws[s])
+    assert float(jnp.abs(out - ref).max()) < 1e-5
+
+    mesh2 = jax.make_mesh((8,), ("dp",),
+                          axis_types=(jax.sharding.AxisType.Auto,))
+    x = jnp.asarray(rng.normal(size=(8, 1000)), jnp.float32)
+    got = jax.jit(jax.shard_map(
+        lambda xl: compressed_psum(xl[0], "dp", 8)[None],
+        mesh=mesh2, in_specs=(P("dp"),), out_specs=P("dp")))(x)
+    want = jnp.sum(x, axis=0)
+    rel = float(jnp.abs(got[0] - want).max() / jnp.abs(want).max())
+    assert rel < 0.05, rel
+    print("PIPE_OK")
+""")
+
+
+def test_gpipe_and_compressed_psum_8dev():
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", GPIPE_SCRIPT % src],
+                         capture_output=True, text=True, timeout=600)
+    assert "PIPE_OK" in out.stdout, out.stderr[-2000:]
+
+
+def test_trainer_resume():
+    from repro.data import TokenStream
+    from repro.models.layers import LMConfig
+    from repro.models.transformer import LM, make_train_step
+    from repro.optim import AdamW
+    from repro.train import Trainer, TrainerConfig
+    cfg = LMConfig(name="t", n_layers=2, d_model=32, n_heads=2,
+                   n_kv_heads=1, d_head=16, d_ff=64, vocab=128, remat=False)
+    model = LM(cfg)
+    opt = AdamW(lr=1e-3)
+    stream = TokenStream(batch=2, seq=16, vocab=128)
+    with tempfile.TemporaryDirectory() as d:
+        params = model.init(jax.random.PRNGKey(0))
+        tr = Trainer(make_train_step(model, opt), params, opt.init(params),
+                     stream, TrainerConfig(num_steps=4, ckpt_dir=d,
+                                           ckpt_every=2, log_every=100))
+        tr.run()
+        p2 = model.init(jax.random.PRNGKey(0))
+        tr2 = Trainer(make_train_step(model, opt), p2, opt.init(p2), stream,
+                      TrainerConfig(num_steps=6, ckpt_dir=d,
+                                    ckpt_every=100, log_every=100))
+        assert tr2.start_step == 4
+        hist = tr2.run()
+        assert len(hist) == 2

@@ -1,0 +1,34 @@
+"""The windowed (Pallas-kernel) probe path must be indistinguishable from
+the per-step probe — results AND traversal counters."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import CSRGraph
+from repro.core.common import probe_first_live, probe_first_live_windowed
+
+
+@pytest.mark.parametrize("seed,window", [(0, 4), (1, 16), (2, 1), (3, 64)])
+def test_windowed_probe_equivalence(seed, window):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(5, 200))
+    m = int(rng.integers(1, 6 * n))
+    g = CSRGraph.from_edges(n, rng.integers(0, n, m),
+                            rng.integers(0, n, m))
+    status = jnp.asarray(rng.random(n) < 0.5)
+    deg = np.diff(np.asarray(g.indptr))
+    start = jnp.asarray(rng.integers(0, deg + 1), jnp.int32)
+    scanning = jnp.asarray(rng.random(n) < 0.7)
+
+    f1, p1, c1 = probe_first_live(status, g.indptr, g.indices, start,
+                                  scanning)
+    for use_kernel in (False, True):
+        f2, p2, c2 = probe_first_live_windowed(
+            status, g.indptr, g.indices, start, scanning, window=window,
+            use_kernel=use_kernel)
+        assert (np.asarray(f1) == np.asarray(f2)).all()
+        # position only meaningful where found
+        fmask = np.asarray(f1)
+        assert (np.asarray(p1)[fmask] == np.asarray(p2)[fmask]).all()
+        assert (np.asarray(c1) == np.asarray(c2)).all(), (
+            np.asarray(c1), np.asarray(c2))
