@@ -8,26 +8,36 @@
             the physically measurable analogue of the paper's Table 9)
   stability — repeatability of edges/time over repeats (paper Fig. 6)
   scaling — edge-sampling sweep 10..100% (paper Figs. 7-9)
+
+All measurements go through compile-once engines (``core.engine.plan``):
+the transpose is built once per graph and every timed call is a cached
+executable — table9/stability measure steady-state serving latency, not
+retrace + host transpose churn.
 """
 from __future__ import annotations
 
-import sys
-
 import numpy as np
 
-from repro.core import CSRGraph, peeling_alpha, trim
+from repro.core import CSRGraph, peeling_alpha
+from repro.core.engine import plan
 from .common import GRAPHS, METHODS, emit, get_graph, timeit
 
 WORKER_SWEEP = (1, 2, 4, 8, 16, 32)
 
 
+def _engines(g, gt, workers):
+    """One engine per method, all sharing the prebuilt transpose."""
+    return {m: plan(g, method=m, workers=workers, transpose=gt)
+            for m in METHODS}
+
+
 def table6():
     for name in GRAPHS:
         g = get_graph(name)
+        eng = plan(g, method="ac6")
         deg_out = np.asarray(g.out_degrees())
-        gt = g.transpose()
-        deg_in = np.asarray(gt.out_degrees())
-        res = trim(g, method="ac6")
+        deg_in = np.asarray(eng.transpose.out_degrees())
+        res = eng.run()
         alpha = peeling_alpha(g)
         emit(f"table6.{name}", 0.0,
              f"n={g.n};m={g.m};deg_in={deg_in.max()};"
@@ -40,7 +50,7 @@ def table7():
         g = get_graph(name)
         gt = g.transpose()
         for method in ("ac4", "ac6"):
-            res = trim(g, method=method, workers=16, transpose=gt)
+            res = plan(g, method=method, workers=16, transpose=gt).run()
             emit(f"table7.{name}.{method}", 0.0,
                  f"max_qp={res.max_frontier}")
 
@@ -51,10 +61,9 @@ def table8():
         gt = g.transpose()
         per_method = {}
         for method in METHODS:
-            kw = dict(transpose=gt) if method.startswith("ac4") else {}
             maxes = {}
             for p in WORKER_SWEEP:
-                res = trim(g, method=method, workers=p, **kw)
+                res = plan(g, method=method, workers=p, transpose=gt).run()
                 maxes[p] = int(res.per_worker_edges.max())
                 emit(f"table8.{name}.{method}.w{p}", 0.0,
                      f"max_edges_per_worker={maxes[p]};"
@@ -69,15 +78,15 @@ def table8():
 def table9():
     for name in GRAPHS:
         g = get_graph(name)
-        gt = g.transpose() if name else None
+        gt = g.transpose()
+        engines = _engines(g, gt, workers=16)
         times = {}
         for method in METHODS:
-            kw = dict(transpose=gt) if method.startswith("ac4") else {}
-            med, std = timeit(lambda m=method, k=kw:
-                              trim(g, method=m, workers=16, **k))
+            eng = engines[method]
+            med, std = timeit(lambda e=eng: e.run().materialize())
             times[method] = med
             emit(f"table9.{name}.{method}", med * 1e6,
-                 f"std_us={std*1e6:.0f}")
+                 f"std_us={std*1e6:.0f};traces={eng.traces}")
         emit(f"table9.{name}.speedup_ac6", 0.0,
              f"vs_ac3={times['ac3']/times['ac6']:.2f};"
              f"vs_ac4={times['ac4']/times['ac6']:.2f}")
@@ -86,14 +95,14 @@ def table9():
 def stability(repeats: int = 10):
     name = "sink_heavy"
     g = get_graph(name)
+    gt = g.transpose()
     for method in ("ac3", "ac4", "ac6"):
+        eng = plan(g, method=method, workers=16, transpose=gt)
         edges, times = [], []
-        gt = g.transpose() if method.startswith("ac4") else None
-        kw = dict(transpose=gt) if gt is not None else {}
         for _ in range(repeats):
             import time as _t
             t0 = _t.perf_counter()
-            res = trim(g, method=method, workers=16, **kw)
+            res = eng.run().materialize()
             times.append(_t.perf_counter() - t0)
             edges.append(res.edges_traversed)
         emit(f"stability.{name}.{method}", float(np.median(times)) * 1e6,
@@ -112,10 +121,9 @@ def scaling():
         gs = CSRGraph.from_edges(g.n, src[keep], ix[keep])
         gst = gs.transpose()
         for method in ("ac3", "ac4", "ac6"):
-            kw = dict(transpose=gst) if method.startswith("ac4") else {}
-            res = trim(gs, method=method, workers=16, **kw)
-            med, _ = timeit(lambda: trim(gs, method=method, workers=16,
-                                         **kw), repeats=2)
+            eng = plan(gs, method=method, workers=16, transpose=gst)
+            res = eng.run()
+            med, _ = timeit(lambda e=eng: e.run().materialize(), repeats=2)
             emit(f"scaling.{name}.{method}.e{pct}", med * 1e6,
                  f"trim_pct={res.trimmed_fraction*100:.1f};"
                  f"max_edges_pw={int(res.per_worker_edges.max())}")

@@ -5,6 +5,10 @@
 Reproduces the paper's Figure-1 scenario — two large SCCs connected by
 chains of trivial SCCs — then scales to a random digraph, showing how much
 of the work trimming removes before any FW-BW pivot search runs.
+
+The driver rides on the compile-once engine: the whole worklist of regions
+shares ONE transpose build and ONE kernel trace per direction
+(``stats["transpose_builds"]`` / ``stats["engine_traces"]`` report it).
 """
 import sys
 
@@ -12,7 +16,7 @@ sys.path.insert(0, "src")
 
 import numpy as np
 
-from repro.core import CSRGraph
+from repro.core import CSRGraph, plan
 from repro.core.scc import same_partition, scc_decompose, tarjan_oracle
 
 # --- paper Figure 1 analogue ------------------------------------------------
@@ -36,9 +40,23 @@ for use_trim in (True, False):
     n_sccs = len(np.unique(labels))
     print(f"use_trim={use_trim}: {n_sccs:,} SCCs, pivots={stats['pivots']}, "
           f"trimmed={stats['trimmed_total']:,}, "
-          f"trim_edges={stats['trim_edges_traversed']:,}")
+          f"trim_edges={stats['trim_edges_traversed']:,}, "
+          f"traces={stats['engine_traces']}, "
+          f"transpose_builds={stats['transpose_builds']}")
 
 oracle = tarjan_oracle(*g.to_numpy())
 assert same_partition(labels, oracle)
 print("matches Tarjan oracle — trimming removed the trivial-SCC work "
       "before any BFS pivot ran.")
+
+# --- engine reuse outside the driver ----------------------------------------
+# the same engine serves ad-hoc region queries (e.g. an interactive client
+# re-trimming subsets) with zero retraces after the first call
+engine = plan(g, method="ac6")
+for keep in (0.8, 0.5, 0.2):
+    mask = rng.random(n) < keep
+    res = engine.run(active=mask)
+    live = np.asarray(res.status).astype(bool)
+    in_region = int(mask.sum() - (live & mask).sum())
+    print(f"re-trim {keep:.0%} region: {in_region:,} of {int(mask.sum()):,} "
+          f"trimmed (traces so far: {engine.traces})")

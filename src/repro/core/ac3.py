@@ -14,15 +14,26 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from .common import per_worker_add, probe_first_live, worker_counts
+from .common import per_worker_add, resolve_probe, worker_counts
+from .registry import KernelSpec, register_kernel
 
 
-@partial(jax.jit, static_argnames=("workers",))
-def ac3_kernel(indptr, indices, worker_ids, workers: int, active=None):
+@partial(jax.jit, static_argnames=("workers", "probe", "window",
+                                   "use_kernel", "counters"))
+def ac3_kernel(indptr, indices, worker_ids, workers: int, active=None, *,
+               probe: str = "dense", window: int = 16,
+               use_kernel: bool | None = None, counters: bool = True):
     """``active``: optional (n,) bool — trim the induced subgraph (vertices
-    outside are treated as already DEAD).  Used by the SCC application."""
+    outside are treated as already DEAD).  Used by the SCC application.
+
+    ``probe``/``window``/``use_kernel`` select the scan implementation
+    (see ``common.resolve_probe``); ``counters=False`` skips per-worker
+    counter accumulation entirely (the serving fast path) and returns
+    ``None`` in the counter slots.
+    """
     n = indptr.shape[0] - 1
     deg = indptr[1:] - indptr[:-1]
+    probe_fn = resolve_probe(probe, window, use_kernel)
     if active is None:
         active = jnp.ones((n,), bool)
 
@@ -31,33 +42,53 @@ def ac3_kernel(indptr, indices, worker_ids, workers: int, active=None):
 
     def body(state):
         status = state["status"]
-        found, pos, probes = probe_first_live(
+        found, pos, probes = probe_fn(
             status, indptr, indices, state["ptr"], scanning=status)
         new_status = status & found
         frontier = status & ~found
         ptr = jnp.where(status, jnp.where(found, pos, deg), state["ptr"])
-        pw = per_worker_add(state["per_worker"], probes, worker_ids, workers)
-        fsz = worker_counts(frontier, worker_ids, workers)
-        return dict(
+        new = dict(
             status=new_status,
             ptr=ptr,
             change=jnp.any(frontier),
             rounds=state["rounds"] + 1,
-            per_worker=pw,
-            max_qp=jnp.maximum(state["max_qp"], jnp.max(fsz)),
             deaths_rounds=state["deaths_rounds"]
             + jnp.any(frontier).astype(jnp.int32),
         )
+        if counters:
+            pw = per_worker_add(state["per_worker"], probes, worker_ids,
+                                workers)
+            fsz = worker_counts(frontier, worker_ids, workers)
+            new["per_worker"] = pw
+            new["max_qp"] = jnp.maximum(state["max_qp"], jnp.max(fsz))
+        return new
 
     init = dict(
         status=active,
         ptr=jnp.zeros((n,), jnp.int32),
         change=jnp.array(True),
         rounds=jnp.array(0, jnp.int32),
-        per_worker=jnp.zeros((workers,), jnp.int32),
-        max_qp=jnp.array(0, jnp.int32),
         deaths_rounds=jnp.array(0, jnp.int32),
     )
+    if counters:
+        init["per_worker"] = jnp.zeros((workers,), jnp.int32)
+        init["max_qp"] = jnp.array(0, jnp.int32)
     out = jax.lax.while_loop(cond, body, init)
-    return (out["status"], out["rounds"], out["per_worker"], out["max_qp"],
+    return (out["status"], out["rounds"],
+            out["per_worker"] if counters else None,
+            out["max_qp"] if counters else None,
             out["deaths_rounds"])
+
+
+def _run_ac3(graph_arrays, transpose_arrays, worker_ids, workers, active, *,
+             probe, window, use_kernel, counters):
+    indptr, indices = graph_arrays
+    status, rounds, pw, max_qp, _ = ac3_kernel(
+        indptr, indices, worker_ids, workers, active=active, probe=probe,
+        window=window, use_kernel=use_kernel, counters=counters)
+    return status, rounds, pw, max_qp
+
+
+register_kernel(KernelSpec(
+    name="ac3", run=_run_ac3, needs_transpose=False,
+    supports_windowed=True, sharded_method="ac3"))

@@ -23,14 +23,18 @@ import jax
 import jax.numpy as jnp
 
 from .common import per_worker_add, worker_counts
+from .registry import KernelSpec, register_kernel
 
 
-@partial(jax.jit, static_argnames=("workers", "count_init_scan"))
+@partial(jax.jit, static_argnames=("workers", "count_init_scan", "counters"))
 def ac4_kernel(indptr, indices, t_indptr, t_indices, t_rows, worker_ids,
-               workers: int, count_init_scan: bool, active=None):
+               workers: int, count_init_scan: bool, active=None, *,
+               counters: bool = True):
     """t_rows: (mT,) source vertex (the dead propagator w) of each Gᵀ edge.
 
     ``active``: optional (n,) bool — trim the induced subgraph.
+    ``counters=False`` skips per-worker counter accumulation (the serving
+    fast path) and returns ``None`` in the counter slots.
     """
     n = indptr.shape[0] - 1
     deg_out = indptr[1:] - indptr[:-1]
@@ -48,9 +52,11 @@ def ac4_kernel(indptr, indices, t_indptr, t_indices, t_rows, worker_ids,
     frontier0 = active & (deg_out == 0)
     status0 = active & ~frontier0
 
-    per_worker0 = jnp.zeros((workers,), jnp.int32)
-    if count_init_scan:  # AC4: counting |v.post| traverses every edge once
-        per_worker0 = per_worker_add(per_worker0, deg_out, worker_ids, workers)
+    if counters:
+        per_worker0 = jnp.zeros((workers,), jnp.int32)
+        if count_init_scan:  # AC4: counting |v.post| traverses every edge
+            per_worker0 = per_worker_add(per_worker0, deg_out, worker_ids,
+                                         workers)
 
     def cond(state):
         return jnp.any(state["frontier"])
@@ -60,32 +66,55 @@ def ac4_kernel(indptr, indices, t_indptr, t_indices, t_rows, worker_ids,
         # bulk FAA: each Gᵀ edge (w -> v) with w in the frontier decrements v
         dec = jax.ops.segment_sum(
             frontier[t_rows].astype(jnp.int32), t_indices, num_segments=n)
-        counters = state["counters"] - dec
-        newly = state["status"] & (counters <= 0)
+        counters_ = state["counters"] - dec
+        newly = state["status"] & (counters_ <= 0)
         status = state["status"] & ~newly
-        # traversed edges: all in-edges of the frontier, attributed to the
-        # worker that owns the propagating vertex (its Q_p in the paper)
-        pw = per_worker_add(state["per_worker"],
-                            jnp.where(frontier, deg_in, 0),
-                            worker_ids, workers)
-        fsz = worker_counts(newly, worker_ids, workers)
-        return dict(
+        new = dict(
             status=status,
-            counters=counters,
+            counters=counters_,
             frontier=newly,
             rounds=state["rounds"] + 1,
-            per_worker=pw,
-            max_qp=jnp.maximum(state["max_qp"], jnp.max(fsz)),
         )
+        if counters:
+            # traversed edges: all in-edges of the frontier, attributed to
+            # the worker that owns the propagating vertex (its Q_p)
+            pw = per_worker_add(state["per_worker"],
+                                jnp.where(frontier, deg_in, 0),
+                                worker_ids, workers)
+            fsz = worker_counts(newly, worker_ids, workers)
+            new["per_worker"] = pw
+            new["max_qp"] = jnp.maximum(state["max_qp"], jnp.max(fsz))
+        return new
 
-    fsz0 = worker_counts(frontier0, worker_ids, workers)
     init = dict(
         status=status0,
         counters=deg_out.astype(jnp.int32),
         frontier=frontier0,
         rounds=jnp.array(0, jnp.int32),
-        per_worker=per_worker0,
-        max_qp=jnp.max(fsz0),
     )
+    if counters:
+        fsz0 = worker_counts(frontier0, worker_ids, workers)
+        init["per_worker"] = per_worker0
+        init["max_qp"] = jnp.max(fsz0)
     out = jax.lax.while_loop(cond, body, init)
-    return out["status"], out["rounds"], out["per_worker"], out["max_qp"]
+    return (out["status"], out["rounds"],
+            out["per_worker"] if counters else None,
+            out["max_qp"] if counters else None)
+
+
+def _run_ac4(graph_arrays, transpose_arrays, worker_ids, workers, active, *,
+             probe, window, use_kernel, counters, count_init_scan):
+    del probe, window, use_kernel  # AC-4 never probes (counter-based)
+    indptr, indices = graph_arrays
+    t_indptr, t_indices, t_rows = transpose_arrays
+    return ac4_kernel(
+        indptr, indices, t_indptr, t_indices, t_rows, worker_ids, workers,
+        count_init_scan=count_init_scan, active=active, counters=counters)
+
+
+register_kernel(KernelSpec(
+    name="ac4", run=partial(_run_ac4, count_init_scan=True),
+    needs_transpose=True, supports_windowed=False, sharded_method="ac4"))
+register_kernel(KernelSpec(
+    name="ac4*", run=partial(_run_ac4, count_init_scan=False),
+    needs_transpose=True, supports_windowed=False, sharded_method="ac4"))

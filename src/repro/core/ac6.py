@@ -27,16 +27,27 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from .common import per_worker_add, probe_first_live, worker_counts
+from .common import per_worker_add, resolve_probe, worker_counts
+from .registry import KernelSpec, register_kernel
 
 
-@partial(jax.jit, static_argnames=("workers",))
-def ac6_kernel(indptr, indices, worker_ids, workers: int, active=None):
+@partial(jax.jit, static_argnames=("workers", "probe", "window",
+                                   "use_kernel", "counters"))
+def ac6_kernel(indptr, indices, worker_ids, workers: int, active=None, *,
+               probe: str = "dense", window: int = 16,
+               use_kernel: bool | None = None, counters: bool = True):
     """``active``: optional (n,) bool — trim the induced subgraph (vertices
-    outside are treated as already DEAD).  Used by the SCC application."""
+    outside are treated as already DEAD).  Used by the SCC application.
+
+    ``probe``/``window``/``use_kernel`` select the scan implementation
+    (see ``common.resolve_probe``); ``counters=False`` skips per-worker
+    counter accumulation entirely (the serving fast path) and returns
+    ``None`` in the counter slots.
+    """
     n = indptr.shape[0] - 1
     m = indices.shape[0]
     deg = indptr[1:] - indptr[:-1]
+    probe_fn = resolve_probe(probe, window, use_kernel)
     if active is None:
         active = jnp.ones((n,), bool)
 
@@ -50,7 +61,7 @@ def ac6_kernel(indptr, indices, worker_ids, workers: int, active=None):
     def body(state):
         status, affected = state["status"], state["affected"]
         # scan strictly after the (dead) support; round 0 starts at 0 (ptr=-1)
-        found, pos, probes = probe_first_live(
+        found, pos, probes = probe_fn(
             status, indptr, indices, state["ptr"] + 1, scanning=affected)
         frontier = affected & ~found           # newly dead this round
         new_status = status & ~frontier
@@ -58,24 +69,43 @@ def ac6_kernel(indptr, indices, worker_ids, workers: int, active=None):
         # lazy supporting-set inversion: whose support died?
         supp_live = new_status[support_of(ptr)]
         next_affected = new_status & ~supp_live & (deg > 0)
-        pw = per_worker_add(state["per_worker"], probes, worker_ids, workers)
-        fsz = worker_counts(frontier, worker_ids, workers)
-        return dict(
+        new = dict(
             status=new_status,
             ptr=ptr,
             affected=next_affected,
             rounds=state["rounds"] + 1,
-            per_worker=pw,
-            max_qp=jnp.maximum(state["max_qp"], jnp.max(fsz)),
         )
+        if counters:
+            pw = per_worker_add(state["per_worker"], probes, worker_ids,
+                                workers)
+            fsz = worker_counts(frontier, worker_ids, workers)
+            new["per_worker"] = pw
+            new["max_qp"] = jnp.maximum(state["max_qp"], jnp.max(fsz))
+        return new
 
     init = dict(
         status=active,
         ptr=jnp.full((n,), -1, jnp.int32),
         affected=active,
         rounds=jnp.array(0, jnp.int32),
-        per_worker=jnp.zeros((workers,), jnp.int32),
-        max_qp=jnp.array(0, jnp.int32),
     )
+    if counters:
+        init["per_worker"] = jnp.zeros((workers,), jnp.int32)
+        init["max_qp"] = jnp.array(0, jnp.int32)
     out = jax.lax.while_loop(cond, body, init)
-    return out["status"], out["rounds"], out["per_worker"], out["max_qp"]
+    return (out["status"], out["rounds"],
+            out["per_worker"] if counters else None,
+            out["max_qp"] if counters else None)
+
+
+def _run_ac6(graph_arrays, transpose_arrays, worker_ids, workers, active, *,
+             probe, window, use_kernel, counters):
+    indptr, indices = graph_arrays
+    return ac6_kernel(
+        indptr, indices, worker_ids, workers, active=active, probe=probe,
+        window=window, use_kernel=use_kernel, counters=counters)
+
+
+register_kernel(KernelSpec(
+    name="ac6", run=_run_ac6, needs_transpose=False,
+    supports_windowed=True, sharded_method="ac6"))

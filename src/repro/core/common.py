@@ -79,7 +79,8 @@ def probe_first_live(status, indptr, indices, start, scanning):
 
 
 def probe_first_live_windowed(status, indptr, indices, start, scanning,
-                              window: int = 16, use_kernel: bool = True):
+                              window: int = 16,
+                              use_kernel: bool | None = None):
     """Window-batched probe: materialize each scanning vertex's next
     ``window`` adjacency entries, reduce them with the
     ``kernels.first_live_scan`` Pallas kernel (block-level frontier skip on
@@ -89,7 +90,8 @@ def probe_first_live_windowed(status, indptr, indices, start, scanning,
 
     This is the TPU-native execution path of the trimming hot loop: one
     XLA gather builds the (n, W) liveness tile, the kernel fuses the row
-    scan (DESIGN.md §6).
+    scan (DESIGN.md §6).  ``use_kernel=None`` (the default) lets
+    ``kernels.ops`` pick: Pallas on TPU, the jnp reference elsewhere.
     """
     from ..kernels import ops as kops
 
@@ -126,6 +128,26 @@ def probe_first_live_windowed(status, indptr, indices, start, scanning,
     pos_out = jnp.where(rest, pos_r, pos_w)
     probes = jnp.where(rest, examined_w + probes_r, examined_w)
     return found, pos_out, probes
+
+
+def resolve_probe(kind: str = "dense", window: int = 16,
+                  use_kernel: bool | None = None):
+    """Map an engine backend's probe kind to a concrete probe function.
+
+    "dense"    — per-step lockstep probing (``probe_first_live``)
+    "windowed" — window-batched probing through the ``first_live_scan``
+                 Pallas kernel (``probe_first_live_windowed``)
+
+    Both are interchangeable inside the AC-3/AC-6 while-loops: identical
+    results including the traversal counters (DESIGN.md §6).
+    """
+    if kind == "dense":
+        return probe_first_live
+    if kind == "windowed":
+        return partial(probe_first_live_windowed, window=window,
+                       use_kernel=use_kernel)
+    raise ValueError(f"unknown probe kind {kind!r}; "
+                     "expected 'dense' or 'windowed'")
 
 
 def per_worker_add(acc, values, worker_ids, workers: int):

@@ -12,14 +12,16 @@ Per-round communication volume:
   AC-3/AC-6:  all_gather of n/P status bytes per device  (O(n) per round)
   AC-4:       psum_scatter of an (n,) int32 decrement vector
 
-This module is exercised three ways: (1) correctness tests on 8 virtual CPU
-devices (subprocess), (2) the 512-chip production-mesh dry-run
+This module provides the shard_map *bodies* and partitioners; callers go
+through the engine (``plan(graph, backend="sharded")``) or the
+:func:`trim_distributed` convenience wrapper, which is now a thin shim over
+a throwaway engine.  It is exercised three ways: (1) correctness tests on 8
+virtual CPU devices (subprocess), (2) the 512-chip production-mesh dry-run
 (`launch/trim.py --dryrun`), (3) the scaling benchmark.
 """
 from __future__ import annotations
 
 import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -28,6 +30,18 @@ from jax.sharding import PartitionSpec as P
 
 from .common import probe_first_live
 from .graph import CSRGraph, TrimResult
+
+from ..jaxcompat import mark_varying as _mark_varying
+from ..jaxcompat import shard_map as _shard_map
+
+
+def shard_map_compat(body, mesh, in_specs: int, out_specs: int, axis):
+    """shard_map ``body`` over ``mesh`` with ``in_specs``/``out_specs``
+    counts of ``P(axis)``-sharded operands/results, on whichever shard_map
+    this jax release ships (see ``repro.jaxcompat``)."""
+    return _shard_map(body, mesh=mesh,
+                      in_specs=(P(axis),) * in_specs,
+                      out_specs=(P(axis),) * out_specs)
 
 
 def build_partition(graph: CSRGraph, num_parts: int):
@@ -64,18 +78,6 @@ def build_partition(graph: CSRGraph, num_parts: int):
     return (jnp.asarray(local_indptr), jnp.asarray(local_indices), n_pad)
 
 
-def _mark_varying(tree, axis):
-    """Mark loop carries as device-varying (shard_map vma typing)."""
-    names = (axis,) if isinstance(axis, str) else tuple(axis)
-
-    def cast(x):
-        vma = getattr(getattr(x, "aval", None), "vma", frozenset())
-        missing = tuple(a for a in names if a not in vma)
-        return jax.lax.pcast(x, missing, to="varying") if missing else x
-
-    return jax.tree.map(cast, tree)
-
-
 def _axis_size(mesh, axis):
     names = (axis,) if isinstance(axis, str) else tuple(axis)
     return int(np.prod([mesh.shape[a] for a in names]))
@@ -98,12 +100,11 @@ def _ac6_body_packed(axis):
     uint32 bitmap (n/8 bytes) instead of a bool array (n bytes) — an 8×
     collective-traffic cut for the paper's technique at pod scale.
     Requires n/P divisible by 32 (pad_to=32 in build_partition)."""
-    def run(lip, lix):
-        lip, lix = lip[0], lix[0]
+    def run(lip, lix, act):
+        lip, lix, act = lip[0], lix[0], act[0]
         nl = lip.shape[0] - 1
         deg = lip[1:] - lip[:-1]
         ml = lix.shape[0]
-        psize = jax.lax.psum(1, axis)
 
         def cond(s):
             return s["go"]
@@ -130,11 +131,11 @@ def _ac6_body_packed(axis):
                                    jnp.sum(frontier.astype(jnp.int32)))),
                 axis)
 
-        init = dict(status_l=jnp.ones((nl,), bool),
-                    status_pg=jnp.full((nl * psize // 32,), 0xFFFFFFFF,
-                                       jnp.uint32),
+        init = dict(status_l=act,
+                    status_pg=jax.lax.all_gather(_pack_bits(act), axis,
+                                                 tiled=True),
                     ptr=jnp.full((nl,), -1, jnp.int32),
-                    affected=jnp.ones((nl,), bool),
+                    affected=act,
                     go=jnp.array(True),
                     rounds=jnp.array(0, jnp.int32),
                     edges=jnp.array(0, jnp.int32),
@@ -146,12 +147,11 @@ def _ac6_body_packed(axis):
 
 
 def _ac6_body(axis):
-    def run(lip, lix):
-        lip, lix = lip[0], lix[0]
+    def run(lip, lix, act):
+        lip, lix, act = lip[0], lix[0], act[0]
         nl = lip.shape[0] - 1
         deg = lip[1:] - lip[:-1]
         ml = lix.shape[0]
-        psize = jax.lax.psum(1, axis)
 
         def cond(s):
             return s["go"]
@@ -176,11 +176,10 @@ def _ac6_body(axis):
                 max_qp=jnp.maximum(s["max_qp"],
                                    jnp.sum(frontier.astype(jnp.int32)))), axis)
 
-        status_l0 = jnp.ones((nl,), bool)
-        init = dict(status_l=status_l0,
-                    status_g=jnp.ones((nl * psize,), bool),
+        init = dict(status_l=act,
+                    status_g=jax.lax.all_gather(act, axis, tiled=True),
                     ptr=jnp.full((nl,), -1, jnp.int32),
-                    affected=jnp.ones((nl,), bool),
+                    affected=act,
                     go=jnp.array(True),
                     rounds=jnp.array(0, jnp.int32),
                     edges=jnp.array(0, jnp.int32),
@@ -192,11 +191,10 @@ def _ac6_body(axis):
 
 
 def _ac3_body(axis):
-    def run(lip, lix):
-        lip, lix = lip[0], lix[0]
+    def run(lip, lix, act):
+        lip, lix, act = lip[0], lix[0], act[0]
         nl = lip.shape[0] - 1
         deg = lip[1:] - lip[:-1]
-        psize = jax.lax.psum(1, axis)
 
         def cond(s):
             return s["go"]
@@ -217,8 +215,8 @@ def _ac3_body(axis):
                 max_qp=jnp.maximum(s["max_qp"],
                                    jnp.sum(frontier.astype(jnp.int32)))), axis)
 
-        init = dict(status_l=jnp.ones((nl,), bool),
-                    status_g=jnp.ones((nl * psize,), bool),
+        init = dict(status_l=act,
+                    status_g=jax.lax.all_gather(act, axis, tiled=True),
                     ptr=jnp.zeros((nl,), jnp.int32),
                     go=jnp.array(True),
                     rounds=jnp.array(0, jnp.int32),
@@ -230,43 +228,12 @@ def _ac3_body(axis):
     return run
 
 
-def trim_distributed(graph: CSRGraph, method: str = "ac6",
-                     mesh: jax.sharding.Mesh | None = None,
-                     axis="workers") -> TrimResult:
-    """Run distributed trimming on ``mesh`` (default: all local devices)."""
-    if mesh is None:
-        ndev = len(jax.devices())
-        mesh = jax.make_mesh((ndev,), ("workers",))
-        axis = "workers"
-    num = _axis_size(mesh, axis)
-    spec_sharded = P(axis)
-    spec_repl = P()
+def build_ac4_sharded(graph: CSRGraph, num: int, axis):
+    """AC-4's sharded state: Gᵀ partition + out-degree counters, built once.
 
-    if method in ("ac3", "ac6", "ac6_packed"):
-        lip, lix, n_pad = build_partition(graph, num)
-        body = {"ac6": _ac6_body, "ac6_packed": _ac6_body_packed,
-                "ac3": _ac3_body}[method](axis)
-        f = jax.jit(jax.shard_map(
-            body, mesh=mesh,
-            in_specs=(spec_sharded, spec_sharded),
-            out_specs=(spec_sharded, spec_sharded, spec_sharded, spec_sharded)))
-        status_l, edges, rounds, max_qp = f(lip, lix)
-        status = np.asarray(status_l).reshape(-1)[: graph.n]
-    elif method in ("ac4", "ac4*"):
-        status, edges, rounds, max_qp = _run_ac4_distributed(
-            graph, mesh, axis, num, spec_sharded)
-    else:
-        raise ValueError(method)
-
-    pw = np.asarray(edges, np.int64).reshape(-1)
-    return TrimResult(status=np.asarray(status).astype(np.int32),
-                      rounds=int(np.max(np.asarray(rounds))),
-                      edges_traversed=int(pw.sum()),
-                      max_frontier=int(np.max(np.asarray(max_qp))),
-                      per_worker_edges=pw)
-
-
-def _run_ac4_distributed(graph, mesh, axis, num, spec_sharded):
+    Returns ``(operands, n_pad, body)`` where ``operands`` are the three
+    (P, ...) sharded arrays the body consumes.  The engine caches all of it.
+    """
     gt = graph.transpose()
     ltip, ltix, n_pad = build_partition(gt, num)
     nl = n_pad // num
@@ -322,10 +289,20 @@ def _run_ac4_distributed(graph, mesh, axis, num, spec_sharded):
         return (out["status_l"][None], out["edges"][None],
                 out["rounds"][None], out["max_qp"][None])
 
-    f = jax.jit(jax.shard_map(
-        run, mesh=mesh,
-        in_specs=(spec_sharded, spec_sharded, spec_sharded),
-        out_specs=(spec_sharded, spec_sharded, spec_sharded, spec_sharded)))
-    status_l, edges, rounds, max_qp = f(ltip, ltix, deg_out)
-    status = np.asarray(status_l).reshape(-1)[: graph.n]
-    return status, edges, rounds, max_qp
+    return (ltip, ltix, deg_out), n_pad, run
+
+
+def trim_distributed(graph: CSRGraph, method: str = "ac6",
+                     mesh: jax.sharding.Mesh | None = None,
+                     axis="workers") -> TrimResult:
+    """Run distributed trimming on ``mesh`` (default: all local devices).
+
+    Compatibility shim over a throwaway sharded-backend engine; long-lived
+    callers should hold ``plan(graph, method=..., backend="sharded")`` and
+    reuse it across runs.
+    """
+    from .engine import plan
+    packed = method == "ac6_packed"
+    eng = plan(graph, method="ac6" if packed else method, backend="sharded",
+               mesh=mesh, axis=axis, packed=packed)
+    return eng.run().materialize()

@@ -1,0 +1,323 @@
+"""Compile-once / run-many trimming engine (DESIGN.md §1).
+
+The paper's algorithms are long-lived workers over a shared status array;
+this module gives them the matching API.  ``plan()`` resolves a method from
+the kernel registry, binds a backend, and returns a :class:`TrimEngine`
+that amortizes every per-call cost the old one-shot ``trim()`` paid:
+
+* the transpose (AC-4's Gᵀ, SCC's backward graph) is built once — a true
+  O(n+m) counting sort — and cached on the engine;
+* the kernel is traced/compiled once per (shape, method, workers)
+  signature and shared process-wide, so a worklist of ``run()`` calls
+  (the SCC driver's regions) reuses one executable;
+* results come back device-resident (:class:`TrimResult`) and only
+  materialize counters on the host when asked.
+
+Backends unify the three execution paths under one API:
+
+    "dense"    — lockstep per-step probing (``common.probe_first_live``)
+    "windowed" — window-batched probing through the ``first_live_scan``
+                 Pallas kernel (``common.probe_first_live_windowed``)
+    "sharded"  — multi-device shard_map kernels (``core.distributed``)
+
+Example::
+
+    engine = plan(graph, method="ac6", backend="dense", workers=16)
+    for mask in regions:
+        result = engine.run(active=mask)          # no retrace, no rebuild
+    results = engine.run_batch(stacked_masks)     # one vmapped dispatch
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+from . import ac3 as _ac3  # noqa: F401  (imports register the kernels)
+from . import ac4 as _ac4  # noqa: F401
+from . import ac6 as _ac6  # noqa: F401
+from .graph import CSRGraph, TrimResult, row_ids, worker_of
+from .registry import available_methods, get_kernel
+
+BACKENDS = ("dense", "windowed", "sharded")
+
+# Process-wide count of kernel traces (bumped from inside traced functions,
+# i.e. exactly once per compilation).  Engines attribute deltas to
+# themselves around each dispatch; tests assert on it (DESIGN.md §7).
+_TRACE_COUNT = [0]
+
+
+@functools.lru_cache(maxsize=None)
+def _local_runner(method: str, probe: str, window: int,
+                  use_kernel, counters: bool, workers: int, batched: bool):
+    """Shared jitted adapter for the dense/windowed backends.
+
+    Cached process-wide on the static configuration so two engines over
+    same-shaped graphs (e.g. the SCC driver's forward and backward passes —
+    Gᵀ has exactly G's shape) share one compiled executable.
+    """
+    import jax
+
+    spec = get_kernel(method)
+
+    def call(indptr, indices, tarrs, worker_ids, active):
+        _TRACE_COUNT[0] += 1  # runs at trace time only
+        return spec.run((indptr, indices), tarrs, worker_ids, workers,
+                        active, probe=probe, window=window,
+                        use_kernel=use_kernel, counters=counters)
+
+    fn = call
+    if batched:
+        fn = jax.vmap(call, in_axes=(None, None, None, None, 0))
+    return jax.jit(fn)
+
+
+def plan(graph: CSRGraph, method: str = "ac6", backend: str = "dense", *,
+         workers: int = 1, chunk: int = 4096, window: int = 16,
+         use_kernel: bool | None = None, transpose: CSRGraph | None = None,
+         mesh=None, axis="workers", packed: bool = False) -> "TrimEngine":
+    """Build a :class:`TrimEngine` for ``graph``.
+
+    ``transpose`` pre-seeds the engine's Gᵀ cache (e.g. the SCC driver
+    already holds it); ``mesh``/``axis``/``packed`` configure the sharded
+    backend (``packed`` exchanges a uint32 bitmap instead of a bool status
+    vector in the per-round collective).
+    """
+    return TrimEngine(graph, method=method, backend=backend, workers=workers,
+                      chunk=chunk, window=window, use_kernel=use_kernel,
+                      transpose=transpose, mesh=mesh, axis=axis,
+                      packed=packed)
+
+
+class TrimEngine:
+    """Compile-once trimming over one graph.  Build with :func:`plan`."""
+
+    def __init__(self, graph, *, method, backend, workers, chunk, window,
+                 use_kernel, transpose, mesh, axis, packed):
+        self.spec = get_kernel(method)   # raises on unknown method
+        if backend not in BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}; expected one of "
+                             f"{BACKENDS}")
+        if backend == "sharded" and self.spec.sharded_method is None:
+            raise ValueError(f"method {method!r} has no sharded kernels")
+        if packed and (backend != "sharded"
+                       or self.spec.sharded_method != "ac6"):
+            raise ValueError(
+                "packed=True (uint32-bitmap status exchange) only applies "
+                "to method='ac6' with backend='sharded'")
+        self.graph = graph
+        self.method = method
+        self.backend = backend
+        self.workers = workers
+        self.chunk = chunk
+        self.window = window
+        self.use_kernel = use_kernel
+        self.mesh = mesh
+        self.axis = axis
+        self.packed = packed
+        self._transpose = transpose
+        self._transpose_builds = 0
+        self._tarrs = None
+        self._worker_ids = None
+        self._shard = None
+        self._traces = 0
+
+    # -- cached resources --------------------------------------------------
+    @property
+    def transpose(self) -> CSRGraph:
+        """Gᵀ, built at most once (O(n+m) counting sort) and cached."""
+        if self._transpose is None:
+            self._transpose = self.graph.transpose()
+            self._transpose_builds += 1
+        return self._transpose
+
+    @property
+    def transpose_builds(self) -> int:
+        """How many times this engine actually built Gᵀ (0 or 1)."""
+        return self._transpose_builds
+
+    @property
+    def traces(self) -> int:
+        """Kernel traces this engine's dispatches caused (compile count)."""
+        return self._traces
+
+    def _transpose_arrays(self):
+        if not self.spec.needs_transpose:
+            return None
+        if self._tarrs is None:
+            gt = self.transpose
+            self._tarrs = (gt.indptr, gt.indices, row_ids(gt.indptr, gt.m))
+        return self._tarrs
+
+    def _ids(self):
+        if self._worker_ids is None:
+            import jax.numpy as jnp
+            self._worker_ids = jnp.asarray(
+                worker_of(self.graph.n, self.workers, self.chunk))
+        return self._worker_ids
+
+    # -- execution ---------------------------------------------------------
+    def run(self, active=None, counters: bool = True) -> TrimResult:
+        """Trim (the ``active``-induced subgraph of) the planned graph.
+
+        ``counters=False`` is the serving fast path: on the dense/windowed
+        backends per-worker counter accumulation is skipped inside the
+        kernel; on the sharded backend the per-device scalar counters are
+        cheap enough that the bodies always carry them and only the
+        result's exposure changes.  Either way ``edges_traversed`` /
+        ``max_frontier`` / ``per_worker_edges`` are ``None``.
+        """
+        n, m = self.graph.n, self.graph.m
+        if active is not None and np.shape(active) != (n,):
+            raise ValueError(f"active mask must have shape ({n},), got "
+                             f"{np.shape(active)}")
+        if n == 0 or m == 0:
+            return self._degenerate(active, counters)
+        if self.backend == "sharded":
+            return self._run_sharded(active, counters)
+        import jax.numpy as jnp
+        act = (jnp.ones((n,), bool) if active is None
+               else jnp.asarray(active, bool))
+        fn = _local_runner(self.method, self._probe_kind(), self.window,
+                           self.use_kernel, counters, self.workers,
+                           batched=False)
+        before = _TRACE_COUNT[0]
+        status, rounds, pw, max_qp = fn(
+            self.graph.indptr, self.graph.indices, self._transpose_arrays(),
+            self._ids(), act)
+        self._traces += _TRACE_COUNT[0] - before
+        return TrimResult(status=status.astype(jnp.int32), rounds=rounds,
+                          max_frontier=max_qp, per_worker_edges=pw)
+
+    def run_batch(self, active_masks, counters: bool = True):
+        """Trim B induced subgraphs in one vmapped dispatch.
+
+        ``active_masks``: (B, n) bool.  Returns a list of B device-resident
+        :class:`TrimResult`, equal element-wise to sequential ``run()``
+        calls (counters included).
+        """
+        if self.backend == "sharded":
+            raise NotImplementedError(
+                "run_batch is a single-device vmap; use the dense or "
+                "windowed backend (shard the batch at the caller instead)")
+        import jax.numpy as jnp
+        masks = jnp.asarray(active_masks, bool)
+        if masks.ndim != 2 or masks.shape[1] != self.graph.n:
+            raise ValueError(f"active_masks must be (B, {self.graph.n}) "
+                             f"bool, got {masks.shape}")
+        n, m = self.graph.n, self.graph.m
+        if n == 0 or m == 0:
+            return [self._degenerate(masks[i], counters)
+                    for i in range(masks.shape[0])]
+        fn = _local_runner(self.method, self._probe_kind(), self.window,
+                           self.use_kernel, counters, self.workers,
+                           batched=True)
+        before = _TRACE_COUNT[0]
+        status, rounds, pw, max_qp = fn(
+            self.graph.indptr, self.graph.indices, self._transpose_arrays(),
+            self._ids(), masks)
+        self._traces += _TRACE_COUNT[0] - before
+        return [TrimResult(status=status[i].astype(jnp.int32),
+                           rounds=rounds[i],
+                           max_frontier=None if max_qp is None else max_qp[i],
+                           per_worker_edges=None if pw is None else pw[i])
+                for i in range(masks.shape[0])]
+
+    def _probe_kind(self):
+        return ("windowed" if self.backend == "windowed"
+                and self.spec.supports_windowed else "dense")
+
+    # -- degenerate host paths (no kernel dispatch) ------------------------
+    def _degenerate(self, active, counters):
+        n = self.graph.n
+        npw = (self._num_shards() if self.backend == "sharded"
+               else self.workers)
+        pw = np.zeros(npw, np.int64) if counters else None
+        if n == 0:
+            return TrimResult(status=np.zeros(0, np.int32), rounds=0,
+                              edges_traversed=0 if counters else None,
+                              max_frontier=0 if counters else None,
+                              per_worker_edges=pw)
+        # no edges: every (active) vertex is a sink and dies in round one;
+        # rounds follows the AC-3 convention (α + 1): one killing round,
+        # one confirming round -> α = 1
+        act = (np.ones(n, bool) if active is None
+               else np.asarray(active, bool))
+        return TrimResult(status=np.zeros(n, np.int32), rounds=2,
+                          edges_traversed=0 if counters else None,
+                          max_frontier=int(act.sum()) if counters else None,
+                          per_worker_edges=pw)
+
+    # -- sharded backend ---------------------------------------------------
+    def _num_shards(self):
+        if self._shard is not None:
+            return self._shard["num"]
+        import jax
+        if self.mesh is None:
+            return len(jax.devices())
+        from . import distributed as dist
+        return dist._axis_size(self.mesh, self.axis)
+
+    def _ensure_sharded(self):
+        if self._shard is not None:
+            return self._shard
+        import jax
+
+        from . import distributed as dist
+        mesh, axis = self.mesh, self.axis
+        if mesh is None:
+            mesh = jax.make_mesh((len(jax.devices()),), ("workers",))
+            axis = "workers"
+        num = dist._axis_size(mesh, axis)
+        kind = self.spec.sharded_method
+        if kind == "ac4":
+            operands, n_pad, body = dist.build_ac4_sharded(self.graph, num,
+                                                           axis)
+            nspecs = 3
+        else:
+            lip, lix, n_pad = dist.build_partition(self.graph, num)
+            operands = (lip, lix)
+            maker = (dist._ac6_body_packed if kind == "ac6" and self.packed
+                     else {"ac3": dist._ac3_body,
+                           "ac6": dist._ac6_body}[kind])
+            body = maker(axis)
+            nspecs = 3  # (lip, lix, act)
+        smapped = dist.shard_map_compat(
+            body, mesh, in_specs=nspecs, out_specs=4, axis=axis)
+
+        def call(*arrs):
+            _TRACE_COUNT[0] += 1
+            return smapped(*arrs)
+
+        self._shard = dict(fn=jax.jit(call), num=num, n_pad=n_pad,
+                           operands=operands, kind=kind)
+        return self._shard
+
+    def _run_sharded(self, active, counters):
+        import jax.numpy as jnp
+        sh = self._ensure_sharded()
+        n = self.graph.n
+        num, n_pad = sh["num"], sh["n_pad"]
+        if sh["kind"] == "ac4":
+            if active is not None:
+                raise NotImplementedError(
+                    "sharded AC-4 does not support active masks (induced "
+                    "out-degrees need a global edge pass); use ac3/ac6 or "
+                    "the dense backend")
+            args = sh["operands"]
+        else:
+            act = np.zeros(n_pad, bool)
+            act[:n] = (True if active is None
+                       else np.asarray(active, bool))
+            args = (*sh["operands"], jnp.asarray(act.reshape(num, -1)))
+        before = _TRACE_COUNT[0]
+        status_l, edges, rounds, max_qp = sh["fn"](*args)
+        self._traces += _TRACE_COUNT[0] - before
+        status = status_l.reshape(-1)[:n].astype(jnp.int32)
+        return TrimResult(
+            status=status, rounds=jnp.max(rounds),
+            max_frontier=jnp.max(max_qp) if counters else None,
+            per_worker_edges=edges.reshape(-1) if counters else None)
+
+
+__all__ = ["plan", "TrimEngine", "BACKENDS", "available_methods"]

@@ -5,14 +5,15 @@ The paper stores explicit graphs in CSR (compressed sparse row) format
 (``indices``).  We keep both arrays as device arrays so every algorithm is
 jit-able with static (n, m).
 
-The transposed graph Gᵀ (needed only by AC-4, paper §5) is built once with
-a counting sort — O(n + m) — mirroring the paper's assumption that AC-4
-pays the full O(n+m) space for reverse edges.
+Construction and transposition are true O(n + m) counting sorts (no
+comparison sort anywhere), mirroring the paper's assumption that AC-4 pays
+the full O(n+m) space — but only linear time — for reverse edges.  The
+transpose is built at most once per :class:`repro.core.engine.TrimEngine`
+and cached for every subsequent run (DESIGN.md §1).
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -20,6 +21,32 @@ import numpy as np
 
 LIVE = np.int32(1)
 DEAD = np.int32(0)
+
+
+def _stable_counting_order(src: np.ndarray, n: int) -> np.ndarray:
+    """Permutation that stably groups edge ids by source vertex, O(n + m).
+
+    scipy's coo→csr conversion is the textbook counting sort (one counting
+    pass, one prefix sum, one scatter — all in C).  Using the edge id as
+    the column key keeps duplicate (u, v) edges distinct and makes the
+    within-row order (ascending column = ascending edge id) exactly the
+    stable input order.  Data is stored 1-based so an explicit-zero pruning
+    pass can never drop an entry.
+    """
+    m = src.shape[0]
+    if m == 0:
+        return np.zeros(0, dtype=np.int64)
+    try:
+        from scipy import sparse
+    except ImportError:
+        # numpy dispatches stable integer sorts to LSD radix sort — still
+        # linear in m, just not the explicit counting sort.
+        return np.argsort(src, kind="stable")
+    csr = sparse.coo_matrix(
+        (np.arange(1, m + 1, dtype=np.int64),
+         (src, np.arange(m, dtype=np.int64))),
+        shape=(n, m)).tocsr()
+    return csr.data - 1
 
 
 @jax.tree_util.register_pytree_node_class
@@ -59,19 +86,20 @@ class CSRGraph:
     def from_edges(n: int, src: np.ndarray, dst: np.ndarray) -> "CSRGraph":
         src = np.asarray(src, dtype=np.int64)
         dst = np.asarray(dst, dtype=np.int64)
-        order = np.argsort(src, kind="stable")
-        src_s, dst_s = src[order], dst[order]
-        counts = np.bincount(src_s, minlength=n)
+        m = src.shape[0]
+        counts = np.bincount(src, minlength=n) if m else np.zeros(n, np.int64)
         indptr = np.zeros(n + 1, dtype=np.int32)
         np.cumsum(counts, out=indptr[1:])
+        if m:
+            dst = dst[_stable_counting_order(src, n)]
         return CSRGraph(jnp.asarray(indptr, jnp.int32),
-                        jnp.asarray(dst_s, jnp.int32))
+                        jnp.asarray(dst, jnp.int32))
 
     def transpose(self) -> "CSRGraph":
-        """Counting-sort transpose (numpy, host side): Gᵀ for AC-4."""
+        """Counting-sort transpose (numpy, host side): Gᵀ, O(n + m)."""
         indptr = np.asarray(self.indptr)
         indices = np.asarray(self.indices)
-        n, m = self.n, self.m
+        n = self.n
         src = np.repeat(np.arange(n, dtype=np.int64), np.diff(indptr))
         return CSRGraph.from_edges(n, indices.astype(np.int64), src)
 
@@ -91,32 +119,92 @@ def row_ids(indptr: jax.Array, m: int) -> jax.Array:
     return jnp.cumsum(marks)
 
 
-@dataclasses.dataclass(frozen=True)
 class TrimResult:
-    """Output of a trimming run.
+    """Output of a trimming run — device-resident, lazily materialized.
+
+    ``status`` stays wherever the producer left it (a device array for
+    ``TrimEngine.run``, numpy for the ``trim()`` shim).  Scalar counters
+    transfer to the host only on first attribute access and are cached, so
+    a pipeline that chains engine runs never blocks on device→host syncs
+    it does not need (DESIGN.md §5).
 
     status:        (n,) int32, LIVE=1 / DEAD=0 at fixpoint
     rounds:        BSP rounds executed (≈ the paper's peeling steps / |Q| bound)
-    edges_traversed: total adjacency entries examined (the paper's key metric)
-    max_frontier:  max per-round frontier size (|Qp| analogue, P=1)
+    edges_traversed: total adjacency entries examined (the paper's key
+                   metric); None when the run disabled counters
+    max_frontier:  max per-round frontier size (|Qp| analogue); None when
+                   the run disabled counters
     per_worker_edges: (P,) traversed-edge counts attributed to static vertex
                    partitions of P workers (paper Fig.4/Table 8 analogue);
-                   None unless counters were requested with workers=P
+                   None unless counters were requested (``counters=True``,
+                   the default)
     """
 
-    status: jax.Array
-    rounds: int
-    edges_traversed: int
-    max_frontier: int
-    per_worker_edges: np.ndarray | None = None
+    __slots__ = ("_status", "_rounds", "_edges", "_max_frontier", "_pw")
 
+    def __init__(self, status, rounds, edges_traversed=None,
+                 max_frontier=None, per_worker_edges=None):
+        self._status = status
+        self._rounds = rounds
+        self._edges = edges_traversed
+        self._max_frontier = max_frontier
+        self._pw = per_worker_edges
+
+    # -- lazy host materialization ----------------------------------------
+    @property
+    def status(self):
+        return self._status
+
+    @property
+    def rounds(self) -> int:
+        if self._rounds is not None and not isinstance(self._rounds, int):
+            self._rounds = int(self._rounds)
+        return self._rounds
+
+    @property
+    def edges_traversed(self):
+        if self._edges is None and self._pw is not None:
+            self._edges = int(np.asarray(self.per_worker_edges).sum())
+        elif self._edges is not None and not isinstance(self._edges, int):
+            self._edges = int(self._edges)
+        return self._edges
+
+    @property
+    def max_frontier(self):
+        if self._max_frontier is not None \
+                and not isinstance(self._max_frontier, int):
+            self._max_frontier = int(self._max_frontier)
+        return self._max_frontier
+
+    @property
+    def per_worker_edges(self):
+        if self._pw is not None and not (
+                isinstance(self._pw, np.ndarray)
+                and self._pw.dtype == np.int64):
+            self._pw = np.asarray(self._pw).astype(np.int64)
+        return self._pw
+
+    def materialize(self) -> "TrimResult":
+        """Force every field to the host (numpy status, python ints)."""
+        self._status = np.asarray(self._status).astype(np.int32)
+        _ = (self.rounds, self.edges_traversed, self.max_frontier,
+             self.per_worker_edges)
+        return self
+
+    # -- derived ----------------------------------------------------------
     @property
     def n_trimmed(self) -> int:
         return int((np.asarray(self.status) == 0).sum())
 
     @property
     def trimmed_fraction(self) -> float:
-        return self.n_trimmed / self.status.shape[0]
+        n = self.status.shape[0]
+        return self.n_trimmed / n if n else 0.0
+
+    def __repr__(self):  # no device sync: report only static facts
+        kind = "numpy" if isinstance(self._status, np.ndarray) else "device"
+        return (f"TrimResult(n={self._status.shape[0]}, {kind}, "
+                f"counters={'on' if self._pw is not None else 'off'})")
 
 
 def worker_of(n: int, workers: int, chunk: int = 4096) -> np.ndarray:

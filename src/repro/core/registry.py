@@ -1,0 +1,67 @@
+"""Kernel registry: trimming method name -> :class:`KernelSpec`.
+
+Replaces the historical ``if method == ...`` dispatch in ``core/trim.py``.
+Each algorithm module (``ac3.py``, ``ac4.py``, ``ac6.py``) registers its
+spec at import time; the engine (``core/engine.py``) resolves a method name
+once at plan time and never branches on strings in the hot path again
+(DESIGN.md §3).
+
+A spec's ``run`` adapter has one uniform signature so every method is
+interchangeable under ``jax.jit`` / ``jax.vmap``::
+
+    run(graph_arrays, transpose_arrays, worker_ids, workers, active, *,
+        probe, window, use_kernel, counters)
+      -> (status, rounds, per_worker, max_qp)
+
+where ``graph_arrays = (indptr, indices)``, ``transpose_arrays`` is
+``(t_indptr, t_indices, t_rows)`` for methods with ``needs_transpose``
+(``None`` otherwise), and ``per_worker`` / ``max_qp`` are ``None`` when
+``counters=False`` (the fast path that skips counter accumulation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    """One registered trimming method.
+
+    name:             public method name ("ac3", "ac4", "ac4*", "ac6")
+    run:              uniform adapter (see module docstring)
+    needs_transpose:  dense/windowed execution reads Gᵀ arrays
+    supports_windowed: honors the windowed-probe backend (counter-based
+                      methods like AC-4 never probe, so the flag is False
+                      and the windowed backend falls back to dense)
+    sharded_method:   key into ``core.distributed``'s shard_map bodies,
+                      or None if the method has no sharded implementation
+    """
+
+    name: str
+    run: Callable
+    needs_transpose: bool = False
+    supports_windowed: bool = False
+    sharded_method: Optional[str] = None
+
+
+_REGISTRY: dict[str, KernelSpec] = {}
+
+
+def register_kernel(spec: KernelSpec) -> KernelSpec:
+    if spec.name in _REGISTRY:
+        raise ValueError(f"kernel {spec.name!r} already registered")
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def get_kernel(name: str) -> KernelSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown method {name!r}; expected one of "
+                         f"{available_methods()}") from None
+
+
+def available_methods() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))

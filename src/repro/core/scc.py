@@ -11,13 +11,20 @@ without difficulty, unlike DFS (paper §1.1).
 The recursion/worklist lives on the host; each trim / BFS step is a
 vectorized (jit-able) whole-graph pass.  This mirrors the paper's usage: a
 driver calls bulk-parallel primitives.
+
+The driver holds TWO compile-once engines (``core.engine.plan``) for the
+whole worklist — forward over G and backward over Gᵀ — so the transpose is
+built exactly once (shared with the BFS arrays) and each trim method is
+traced exactly once per graph shape, no matter how many regions the
+worklist produces.  Gᵀ has G's exact array shapes, so both engines even
+share one compiled executable.
 """
 from __future__ import annotations
 
 import numpy as np
 
+from .engine import plan
 from .graph import CSRGraph
-from .trim import trim
 
 
 def _bfs_mask(indptr, indices, start: int, active: np.ndarray) -> np.ndarray:
@@ -44,17 +51,28 @@ def _bfs_mask(indptr, indices, start: int, active: np.ndarray) -> np.ndarray:
 
 def scc_decompose(graph: CSRGraph, use_trim: bool = True,
                   trim_method: str = "ac6", trim_transpose: bool = True,
-                  max_pivots: int = 1_000_000):
+                  max_pivots: int = 1_000_000, trim_backend: str = "dense"):
     """Return (labels, stats). labels: (n,) int64 component ids (dense)."""
     indptr, indices = graph.to_numpy()
-    gt = graph.transpose()
-    t_indptr, t_indices = gt.to_numpy()
     n = graph.n
+
+    if use_trim:
+        # one engine per direction, reused across the whole worklist; the
+        # backward engine's transpose cache is pre-seeded with G itself
+        fw_engine = plan(graph, method=trim_method, backend=trim_backend)
+        gt = fw_engine.transpose          # built once, shared with the BFS
+        bw_engine = plan(gt, method=trim_method, backend=trim_backend,
+                         transpose=graph)
+    else:
+        fw_engine = bw_engine = None
+        gt = graph.transpose()
+    t_indptr, t_indices = gt.to_numpy()
 
     labels = np.full(n, -1, dtype=np.int64)
     next_label = 0
     stats = {"trim_passes": 0, "trimmed_total": 0, "pivots": 0,
-             "trim_edges_traversed": 0}
+             "trim_edges_traversed": 0, "engine_traces": 0,
+             "transpose_builds": 1}
 
     worklist = [np.ones(n, dtype=bool)]
     while worklist:
@@ -65,10 +83,10 @@ def scc_decompose(graph: CSRGraph, use_trim: bool = True,
 
         if use_trim:
             # forward pass: no live successor => size-1 SCC
-            for g_, label_tag in ((graph, "fw"), (gt, "bw")):
+            for engine, label_tag in ((fw_engine, "fw"), (bw_engine, "bw")):
                 if label_tag == "bw" and not trim_transpose:
                     continue
-                res = trim(g_, method=trim_method, active=live)
+                res = engine.run(active=live)
                 stats["trim_passes"] += 1
                 stats["trim_edges_traversed"] += res.edges_traversed
                 dead = live & (np.asarray(res.status) == 0)
@@ -98,6 +116,10 @@ def scc_decompose(graph: CSRGraph, use_trim: bool = True,
                 worklist.append(region)
 
     assert (labels >= 0).all()
+    if use_trim:
+        stats["engine_traces"] = fw_engine.traces + bw_engine.traces
+        stats["transpose_builds"] = (fw_engine.transpose_builds
+                                     + bw_engine.transpose_builds)
     return labels, stats
 
 

@@ -6,66 +6,31 @@
 unique fixpoint (Definition 1); they differ in work, space, propagation
 structure and — the paper's headline metric — the number of adjacency
 entries traversed.
+
+``trim()`` is now a thin compatibility shim over the compile-once engine
+(``core.engine``): it builds a throwaway :class:`~repro.core.engine.TrimEngine`
+and materializes the result on the host.  Anything calling trim more than
+once on the same graph shapes should hold a ``plan(...)`` engine instead —
+the transpose cache, the kernel registry, and the jit cache all live there
+(DESIGN.md §1).
 """
 from __future__ import annotations
 
-import numpy as np
+from .engine import plan
+from .graph import CSRGraph, TrimResult
+from .registry import available_methods
 
-from .ac3 import ac3_kernel
-from .ac4 import ac4_kernel
-from .ac6 import ac6_kernel
-from .graph import CSRGraph, TrimResult, row_ids, worker_of
-
-METHODS = ("ac3", "ac4", "ac4*", "ac6")
+METHODS = available_methods()   # ("ac3", "ac4", "ac4*", "ac6")
 
 
 def trim(graph: CSRGraph, method: str = "ac6", workers: int = 1,
          chunk: int = 4096, transpose: CSRGraph | None = None,
-         active=None) -> TrimResult:
+         active=None, backend: str = "dense",
+         counters: bool = True) -> TrimResult:
     """``active``: optional (n,) bool mask — trim the induced subgraph."""
-    if method not in METHODS:
-        raise ValueError(f"unknown method {method!r}; expected one of {METHODS}")
-    n, m = graph.n, graph.m
-    if n == 0:
-        return TrimResult(status=np.zeros(0, np.int32), rounds=0,
-                          edges_traversed=0, max_frontier=0,
-                          per_worker_edges=np.zeros(workers, np.int64))
-    if m == 0:
-        # no edges: every (active) vertex is a sink and dies in round one
-        act = (np.ones(n, bool) if active is None
-               else np.asarray(active, bool))
-        # rounds follows the AC-3 convention (α + 1): one killing round,
-        # one confirming round -> α = 1
-        return TrimResult(status=np.zeros(n, np.int32), rounds=2,
-                          edges_traversed=0, max_frontier=int(act.sum()),
-                          per_worker_edges=np.zeros(workers, np.int64))
-    import jax.numpy as jnp
-    worker_ids = jnp.asarray(worker_of(n, workers, chunk))
-    if active is not None:
-        active = jnp.asarray(active, bool)
-
-    if method == "ac3":
-        status, rounds, pw, max_qp, _ = ac3_kernel(
-            graph.indptr, graph.indices, worker_ids, workers, active=active)
-    elif method == "ac6":
-        status, rounds, pw, max_qp = ac6_kernel(
-            graph.indptr, graph.indices, worker_ids, workers, active=active)
-    else:  # ac4 / ac4*
-        gt = transpose if transpose is not None else graph.transpose()
-        t_rows = row_ids(gt.indptr, gt.m)
-        status, rounds, pw, max_qp = ac4_kernel(
-            graph.indptr, graph.indices, gt.indptr, gt.indices, t_rows,
-            worker_ids, workers, count_init_scan=(method == "ac4"),
-            active=active)
-
-    pw = np.asarray(pw, dtype=np.int64)
-    return TrimResult(
-        status=np.asarray(status).astype(np.int32),
-        rounds=int(rounds),
-        edges_traversed=int(pw.sum()),
-        max_frontier=int(max_qp),
-        per_worker_edges=pw,
-    )
+    engine = plan(graph, method=method, backend=backend, workers=workers,
+                  chunk=chunk, transpose=transpose)
+    return engine.run(active=active, counters=counters).materialize()
 
 
 def peeling_alpha(graph: CSRGraph) -> int:

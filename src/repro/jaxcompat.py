@@ -1,0 +1,48 @@
+"""Version portability for the handful of jax APIs this repo uses that
+moved between releases.  Import from here, not from jax directly:
+
+* ``shard_map`` — ``jax.shard_map`` (jax >= 0.6, vma-typed) or
+  ``jax.experimental.shard_map.shard_map`` with ``check_rep=False`` (older
+  releases choke on while_loop replication rules otherwise).
+* ``mark_varying`` — casts loop carries to device-varying under the new
+  vma type system (``jax.lax.pcast``); identity on releases without it.
+* ``make_mesh`` — forwards ``axis_types`` only where ``jax.sharding``
+  knows about them.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+try:
+    shard_map = jax.shard_map
+    HAS_VMA = hasattr(jax.lax, "pcast")
+except AttributeError:
+    from jax.experimental.shard_map import shard_map as _esm
+    shard_map = partial(_esm, check_rep=False)
+    HAS_VMA = False
+
+
+def mark_varying(tree, axis):
+    """Mark loop carries as device-varying (shard_map vma typing).
+    No-op on jax releases without vma types."""
+    if not HAS_VMA:
+        return tree
+    names = (axis,) if isinstance(axis, str) else tuple(axis)
+
+    def cast(x):
+        vma = getattr(getattr(x, "aval", None), "vma", frozenset())
+        missing = tuple(a for a in names if a not in vma)
+        return jax.lax.pcast(x, missing, to="varying") if missing else x
+
+    return jax.tree.map(cast, tree)
+
+
+def make_mesh(shape, axes, *, auto: bool = True):
+    """``jax.make_mesh`` with Auto axis types where supported."""
+    if auto and hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)

@@ -7,8 +7,6 @@ links).  Hardware constants used by the roofline layer live here too.
 """
 from __future__ import annotations
 
-import jax
-
 # TPU v5e per-chip peaks (assignment-provided)
 PEAK_FLOPS_BF16 = 197e12          # FLOP/s
 HBM_BW = 819e9                    # bytes/s
@@ -16,11 +14,10 @@ ICI_BW = 50e9                     # bytes/s per link
 
 
 def make_production_mesh(*, multi_pod: bool = False):
+    from ..jaxcompat import make_mesh
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes, auto=True)
 
 
 def data_axes(multi_pod: bool) -> tuple[str, ...]:

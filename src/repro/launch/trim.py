@@ -6,37 +6,46 @@ if "--dryrun" in __import__("sys").argv:
 
     # run locally on this container (1 device):
     PYTHONPATH=src python -m repro.launch.trim --graph BA --method ac6
+    # windowed Pallas probe path / sharded shard_map path:
+    PYTHONPATH=src python -m repro.launch.trim --graph BA --backend windowed
+    PYTHONPATH=src python -m repro.launch.trim --graph BA --backend sharded
     # production-mesh dry-run (512 virtual chips):
     PYTHONPATH=src python -m repro.launch.trim --dryrun --method ac6
+
+Serving goes through the compile-once engine: ``plan()`` once, then every
+``run()`` reuses the cached transpose and compiled kernel — the first/steady
+timing split below is the whole point (DESIGN.md §1).
 """
 import argparse
 import time
 
-import numpy as np
 
-
-def run_local(graph_name: str, method: str, workers: int):
-    from ..core import trim, trim_oracle
+def run_local(graph_name: str, method: str, workers: int,
+              backend: str = "dense"):
+    from ..core.engine import plan
     from ..graphs import make
     g = make(graph_name)
+    engine = plan(g, method=method, backend=backend, workers=workers)
     t0 = time.time()
-    res = trim(g, method=method, workers=workers)
-    dt = time.time() - t0
-    print(f"[trim] {graph_name} n={g.n} m={g.m} method={method}: "
-          f"trimmed {res.n_trimmed} ({res.trimmed_fraction*100:.1f}%) "
-          f"rounds={res.rounds} edges={res.edges_traversed} "
-          f"max|Qp|={res.max_frontier} in {dt:.2f}s")
+    res = engine.run().materialize()
+    t_first = time.time() - t0
+    t0 = time.time()
+    res = engine.run().materialize()     # compile-cache hit
+    t_steady = time.time() - t0
+    print(f"[trim] {graph_name} n={g.n} m={g.m} method={method} "
+          f"backend={backend}: trimmed {res.n_trimmed} "
+          f"({res.trimmed_fraction*100:.1f}%) rounds={res.rounds} "
+          f"edges={res.edges_traversed} max|Qp|={res.max_frontier} | "
+          f"first={t_first:.2f}s steady={t_steady*1e3:.1f}ms "
+          f"traces={engine.traces}")
     return res
 
 
 def run_dryrun(method: str):
     """Lower + compile distributed trimming for the 512-chip mesh."""
     import jax
-    from jax.sharding import PartitionSpec as P
 
-    from ..core.distributed import (_ac3_body, _ac6_body, build_partition)
-    from ..core.graph import CSRGraph
-    from ..graphs.generators import erdos_renyi
+    from ..core.distributed import _ac3_body, _ac6_body, shard_map_compat
     from .mesh import make_production_mesh
 
     mesh = make_production_mesh(multi_pod=True)
@@ -48,13 +57,12 @@ def run_dryrun(method: str):
     nl, ml = n // num, m // num  # balanced partition assumption
     lip = jax.ShapeDtypeStruct((num, nl + 1), jax.numpy.int32)
     lix = jax.ShapeDtypeStruct((num, 2 * ml), jax.numpy.int32)
+    act = jax.ShapeDtypeStruct((num, nl), jax.numpy.bool_)
     body = {"ac3": _ac3_body, "ac6": _ac6_body}[method](axis)
-    f = jax.jit(jax.shard_map(
-        body, mesh=mesh,
-        in_specs=(P(axis), P(axis)),
-        out_specs=(P(axis),) * 4))
+    f = jax.jit(shard_map_compat(body, mesh, in_specs=3, out_specs=4,
+                                 axis=axis))
     t0 = time.time()
-    lowered = f.lower(lip, lix)
+    lowered = f.lower(lip, lix, act)
     compiled = lowered.compile()
     dt = time.time() - t0
     mem = compiled.memory_analysis()
@@ -75,12 +83,14 @@ def main():
     ap.add_argument("--graph", default="BA")
     ap.add_argument("--method", default="ac6")
     ap.add_argument("--workers", type=int, default=16)
+    ap.add_argument("--backend", default="dense",
+                    choices=("dense", "windowed", "sharded"))
     ap.add_argument("--dryrun", action="store_true")
     args = ap.parse_args()
     if args.dryrun:
         run_dryrun(args.method)
     else:
-        run_local(args.graph, args.method, args.workers)
+        run_local(args.graph, args.method, args.workers, args.backend)
 
 
 if __name__ == "__main__":

@@ -134,7 +134,8 @@ class WideDeep:
             emb = jnp.where(ok[..., None], emb, 0.0)
             return jax.lax.psum(emb.sum(axis=1), axis)
 
-        return jax.shard_map(
+        from ..jaxcompat import shard_map
+        return shard_map(
             body, mesh=mesh,
             in_specs=(P(axis, None), P()),
             out_specs=P())(table, ids)

@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..jaxcompat import mark_varying, shard_map
+
 
 def gpipe_apply(stage_fn, stage_params, microbatches, *, mesh,
                 axis: str = "stage"):
@@ -52,13 +54,8 @@ def gpipe_apply(stage_fn, stage_params, microbatches, *, mesh,
             return (buf, outs), None
 
         microbatches_ref = mb
-        vary = lambda x: jax.lax.pcast(
-            x, tuple(a for a in (axis,)
-                     if a not in getattr(x.aval, "vma", frozenset())),
-            to="varying") if axis not in getattr(
-                x.aval, "vma", frozenset()) else x
-        buf0 = vary(jnp.zeros_like(mb[0]))
-        outs0 = vary(jnp.zeros_like(mb))
+        buf0 = mark_varying(jnp.zeros_like(mb[0]), axis)
+        outs0 = mark_varying(jnp.zeros_like(mb), axis)
         (_, outs), _ = jax.lax.scan(tick, (buf0, outs0),
                                     jnp.arange(n_tick))
         # only the last stage holds real outputs; broadcast to all
@@ -66,7 +63,7 @@ def gpipe_apply(stage_fn, stage_params, microbatches, *, mesh,
             jnp.where(stage == S - 1, outs, jnp.zeros_like(outs)), axis)
         return outs
 
-    fn = jax.shard_map(
+    fn = shard_map(
         body, mesh=mesh,
         in_specs=(P(axis), P()),
         out_specs=P())

@@ -1,0 +1,244 @@
+"""Compile-once TrimEngine: plan/run lifecycle, kernel registry, backends.
+
+Deterministic (no hypothesis) so this coverage survives even when the
+optional property-testing dep is absent.  Trace-count assertions use the
+engine's own accounting (bumped only inside traced functions); the jit
+cache is process-wide, so tests that assert an exact count use graph
+shapes no other test produces.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (CSRGraph, available_methods, peeling_alpha_oracle,
+                        plan, trim, trim_oracle)
+from repro.core.engine import BACKENDS
+from repro.core.scc import same_partition, scc_decompose, tarjan_oracle
+from repro.graphs import barabasi_albert
+
+METHODS = ("ac3", "ac4", "ac4*", "ac6")
+
+
+def random_graph(seed, n, factor=3):
+    rng = np.random.default_rng(seed)
+    m = factor * n
+    return CSRGraph.from_edges(n, rng.integers(0, n, m),
+                               rng.integers(0, n, m))
+
+
+def induced_oracle(g, active):
+    ip, ix = g.to_numpy()
+    src = np.repeat(np.arange(g.n), np.diff(ip))
+    keep = active[src] & active[ix]
+    sub = CSRGraph.from_edges(g.n, src[keep], ix[keep])
+    return trim_oracle(*sub.to_numpy()) & active
+
+
+# -- registry -----------------------------------------------------------------
+
+def test_registry_has_paper_methods():
+    assert set(METHODS) <= set(available_methods())
+
+
+def test_unknown_method_and_backend_raise():
+    g = random_graph(0, n=10)
+    with pytest.raises(ValueError, match="unknown method"):
+        plan(g, method="ac99")
+    with pytest.raises(ValueError, match="unknown backend"):
+        plan(g, method="ac6", backend="gpu-farm")
+
+
+# -- compile-once contract ----------------------------------------------------
+
+def test_compile_cache_reuse_across_runs():
+    # unique shape (n=103, m=309) so no other test warms this cache entry
+    g = random_graph(1, n=103)
+    engine = plan(g, method="ac6")
+    rng = np.random.default_rng(1)
+    for i in range(5):
+        mask = rng.random(g.n) < 0.7
+        res = engine.run(active=mask)
+        assert (np.asarray(res.status).astype(bool)
+                == induced_oracle(g, mask)).all()
+    assert engine.traces == 1   # 5 runs, one trace
+
+
+def test_transpose_built_once_and_shareable():
+    g = random_graph(2, n=50)
+    engine = plan(g, method="ac4")
+    for _ in range(3):
+        engine.run()
+    assert engine.transpose_builds == 1
+    # pre-seeding skips the build entirely
+    engine2 = plan(g, method="ac4", transpose=engine.transpose)
+    engine2.run()
+    assert engine2.transpose_builds == 0
+
+
+def test_run_batch_matches_sequential():
+    g = random_graph(3, n=71)
+    rng = np.random.default_rng(3)
+    masks = np.stack([rng.random(g.n) < p for p in (0.9, 0.6, 0.3, 1.0)])
+    for method in METHODS:
+        engine = plan(g, method=method, workers=3, chunk=8)
+        seq = [engine.run(active=m) for m in masks]
+        bat = engine.run_batch(masks)
+        for a, b in zip(seq, bat):
+            assert (np.asarray(a.status) == np.asarray(b.status)).all()
+            assert a.rounds == b.rounds
+            assert a.edges_traversed == b.edges_traversed
+            assert a.max_frontier == b.max_frontier
+            assert (a.per_worker_edges == b.per_worker_edges).all()
+
+
+# -- counters fast path -------------------------------------------------------
+
+def test_counters_false_skips_accumulation():
+    g = random_graph(4, n=64)
+    for method in METHODS:
+        engine = plan(g, method=method)
+        full = engine.run()
+        fast = engine.run(counters=False)
+        assert (np.asarray(full.status) == np.asarray(fast.status)).all()
+        assert fast.per_worker_edges is None
+        assert fast.edges_traversed is None
+        assert fast.max_frontier is None
+        assert fast.rounds == full.rounds
+        # docstring contract: counters requested => populated
+        assert full.per_worker_edges is not None
+        assert full.per_worker_edges.sum() == full.edges_traversed
+
+
+def test_counters_false_batch():
+    g = random_graph(5, n=40)
+    masks = np.ones((2, g.n), bool)
+    engine = plan(g, method="ac6")
+    for res in engine.run_batch(masks, counters=False):
+        assert res.per_worker_edges is None
+        assert (np.asarray(res.status).astype(bool)
+                == trim_oracle(*g.to_numpy())).all()
+
+
+# -- edge cases across methods and backends -----------------------------------
+
+@pytest.mark.parametrize("backend", ("dense", "windowed"))
+@pytest.mark.parametrize("method", METHODS)
+def test_empty_graphs(method, backend):
+    # n == 0
+    g0 = CSRGraph.from_edges(0, [], [])
+    engine = plan(g0, method=method, backend=backend)
+    res = engine.run()
+    assert res.status.shape == (0,) and res.rounds == 0
+    assert res.edges_traversed == 0
+    # m == 0: every active vertex is a sink
+    g1 = CSRGraph.from_edges(5, [], [])
+    engine = plan(g1, method=method, backend=backend, workers=2)
+    res = engine.run()
+    assert res.n_trimmed == 5 and res.rounds == 2
+    assert res.per_worker_edges.shape == (2,)
+    res = engine.run(active=np.array([1, 0, 1, 0, 0], bool))
+    assert res.max_frontier == 2
+    for r in engine.run_batch(np.ones((2, 5), bool)):
+        assert r.n_trimmed == 5
+    # counters off on the degenerate path too
+    assert engine.run(counters=False).per_worker_edges is None
+
+
+@pytest.mark.parametrize("backend", ("dense", "windowed"))
+@pytest.mark.parametrize("method", METHODS)
+def test_active_mask_all_backends(method, backend):
+    g = random_graph(6, n=60)
+    rng = np.random.default_rng(6)
+    active = rng.random(g.n) < 0.6
+    engine = plan(g, method=method, backend=backend, window=4)
+    res = engine.run(active=active)
+    assert (np.asarray(res.status).astype(bool)
+            == induced_oracle(g, active)).all()
+
+
+def test_windowed_counters_match_dense():
+    g = random_graph(7, n=90)
+    for method in ("ac3", "ac6"):
+        dense = plan(g, method=method, workers=4).run()
+        windowed = plan(g, method=method, backend="windowed", window=4,
+                        workers=4).run()
+        assert (np.asarray(dense.status) == np.asarray(windowed.status)).all()
+        assert dense.edges_traversed == windowed.edges_traversed
+        assert (dense.per_worker_edges == windowed.per_worker_edges).all()
+
+
+def test_sharded_backend_matches_oracle():
+    # runs on however many devices the test process sees (1 by default)
+    g = random_graph(8, n=77)
+    oracle = trim_oracle(*g.to_numpy())
+    for method in METHODS:
+        engine = plan(g, method=method, backend="sharded")
+        res = engine.run()
+        assert (np.asarray(res.status).astype(bool) == oracle).all(), method
+    # active masks on the status-exchange methods
+    rng = np.random.default_rng(8)
+    active = rng.random(g.n) < 0.5
+    engine = plan(g, method="ac6", backend="sharded")
+    res = engine.run(active=active)
+    assert (np.asarray(res.status).astype(bool)
+            == induced_oracle(g, active)).all()
+    assert engine.traces == 1
+    with pytest.raises(NotImplementedError):
+        plan(g, method="ac4", backend="sharded").run(active=active)
+    with pytest.raises(NotImplementedError):
+        engine.run_batch(np.ones((2, g.n), bool))
+
+
+# -- shim compatibility -------------------------------------------------------
+
+def test_shim_matches_engine_and_oracle():
+    g = random_graph(9, n=83)
+    oracle = trim_oracle(*g.to_numpy())
+    alpha = peeling_alpha_oracle(*g.to_numpy())
+    for method in METHODS:
+        res = trim(g, method=method, workers=3, chunk=4)
+        assert isinstance(res.status, np.ndarray)
+        assert res.status.dtype == np.int32
+        assert (res.status.astype(bool) == oracle).all()
+        assert res.per_worker_edges.dtype == np.int64
+        assert res.per_worker_edges.sum() == res.edges_traversed
+        eng = plan(g, method=method, workers=3, chunk=4).run().materialize()
+        assert (res.status == eng.status).all()
+        assert res.rounds == eng.rounds
+    from repro.core import peeling_alpha
+    assert peeling_alpha(g) == alpha
+
+
+def test_backends_constant():
+    assert BACKENDS == ("dense", "windowed", "sharded")
+
+
+# -- SCC acceptance: one transpose build, one trace per (method, shape) -------
+
+def test_scc_single_transpose_and_trace(monkeypatch):
+    calls = []
+    orig = CSRGraph.transpose
+
+    def counting(self):
+        calls.append(1)
+        return orig(self)
+
+    monkeypatch.setattr(CSRGraph, "transpose", counting)
+    g = barabasi_albert(10_000, 5, seed=3)
+    labels, stats = scc_decompose(g, use_trim=True, trim_method="ac6")
+    assert len(calls) == 1                  # one transpose across the worklist
+    assert stats["transpose_builds"] == 1
+    assert stats["engine_traces"] <= 1      # one jit trace per (method, shape)
+    assert stats["trimmed_total"] == 10_000  # BA construction graph is a DAG
+    assert (np.unique(labels) == np.arange(10_000)).all()
+
+
+def test_scc_matches_tarjan_deterministic():
+    rng = np.random.default_rng(12)
+    for _ in range(4):
+        n = int(rng.integers(2, 60))
+        m = int(rng.integers(0, 3 * n))
+        g = CSRGraph.from_edges(n, rng.integers(0, n, m),
+                                rng.integers(0, n, m))
+        for use_trim in (True, False):
+            labels, _ = scc_decompose(g, use_trim=use_trim)
+            assert same_partition(labels, tarjan_oracle(*g.to_numpy()))

@@ -2,6 +2,12 @@
 against an iterative Tarjan oracle."""
 import numpy as np
 import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property-based suite needs the optional hypothesis dep "
+           "(pip install -e .[test]); deterministic SCC coverage "
+           "lives in test_engine.py")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import CSRGraph

@@ -77,11 +77,11 @@ GPIPE_SCRIPT = textwrap.dedent("""
     sys.path.insert(0, %r)
     import jax, jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
+    from repro.jaxcompat import make_mesh, shard_map
     from repro.train.pipeline import gpipe_apply
     from repro.train.compression import compressed_psum
 
-    mesh = jax.make_mesh((4, 2), ("stage", "dp"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((4, 2), ("stage", "dp"))
     S, M, mb, d = 4, 6, 8, 16
     rng = np.random.default_rng(0)
     ws = jnp.asarray(rng.normal(size=(S, d, d)) / np.sqrt(d), jnp.float32)
@@ -93,10 +93,9 @@ GPIPE_SCRIPT = textwrap.dedent("""
         ref = jnp.tanh(ref @ ws[s])
     assert float(jnp.abs(out - ref).max()) < 1e-5
 
-    mesh2 = jax.make_mesh((8,), ("dp",),
-                          axis_types=(jax.sharding.AxisType.Auto,))
+    mesh2 = make_mesh((8,), ("dp",))
     x = jnp.asarray(rng.normal(size=(8, 1000)), jnp.float32)
-    got = jax.jit(jax.shard_map(
+    got = jax.jit(shard_map(
         lambda xl: compressed_psum(xl[0], "dp", 8)[None],
         mesh=mesh2, in_specs=(P("dp"),), out_specs=P("dp")))(x)
     want = jnp.sum(x, axis=0)

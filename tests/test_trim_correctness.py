@@ -4,6 +4,12 @@ invariants, on random digraphs (hypothesis) and structured families.
 """
 import numpy as np
 import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property-based suite needs the optional hypothesis dep "
+           "(pip install -e .[test]); deterministic engine coverage "
+           "lives in test_engine.py")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (CSRGraph, complete, peeling_alpha,
