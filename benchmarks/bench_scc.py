@@ -1,0 +1,202 @@
+"""SCC driver benchmark: trim-only vs host-BFS driver vs the batched
+device-resident driver (DESIGN.md §8), on the ``configs/trim_graphs.py``
+graph families at benchmark scale.
+
+    PYTHONPATH=src python benchmarks/bench_scc.py            # BENCH_scc.json
+    PYTHONPATH=src python benchmarks/bench_scc.py --smoke    # CI smoke sizes
+
+The three measurements per family:
+
+  trim_only_ms  — one compile-once trim pass over the full graph
+                  (``counters=False`` serving path): the floor any SCC
+                  driver pays before reachability starts.
+  host_bfs_ms   — the pre-ReachEngine driver: region-at-a-time worklist,
+                  numpy frontier BFS (a Python loop over ``np.concatenate``
+                  per frontier), trim through the engines.  This is the
+                  seed implementation, kept here as the baseline.
+  batched_ms    — ``scc_decompose``: per generation one batched trim
+                  dispatch + two batched reach dispatches, labels
+                  device-resident until the end.
+
+All timings are steady-state (first call warms the jit caches), median of
+``--repeats``.  Output is one JSON document so the perf trajectory is
+machine-readable across PRs.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core import plan
+from repro.core.scc import same_partition, scc_decompose
+from repro.graphs import generators
+
+# configs/trim_graphs.py families at benchmark scale: every family keeps
+# its structural signature (paper Table 6) at sizes where the host-BFS
+# baseline finishes in minutes on one core
+SIZES = {
+    "ER": dict(n=50_000, m=400_000, seed=1),
+    "BA": dict(n=20_000, deg=8, seed=1),
+    "RMAT": dict(n_log2=14, m=131_072, seed=1),
+    "chain": dict(n=5_000),
+    "layered": dict(n=50_000, layers=37, deg=4, seed=1),
+    "sink_heavy": dict(n=50_000, m=200_000, sink_frac=0.9, seed=1),
+}
+SMOKE_SIZES = {
+    "ER": dict(n=2_000, m=16_000, seed=1),
+    "BA": dict(n=2_000, deg=8, seed=1),
+    "RMAT": dict(n_log2=10, m=8_192, seed=1),
+    "chain": dict(n=500),
+    "layered": dict(n=2_000, layers=21, deg=4, seed=1),
+    "sink_heavy": dict(n=2_000, m=8_000, sink_frac=0.9, seed=1),
+}
+
+
+# -- the pre-ReachEngine driver (seed implementation), kept as baseline -------
+
+def _host_bfs_mask(indptr, indices, start, active):
+    """Vertices reachable from ``start`` within ``active`` (numpy
+    frontier; Python loop over per-vertex adjacency slices)."""
+    n = len(indptr) - 1
+    visited = np.zeros(n, dtype=bool)
+    if not active[start]:
+        return visited
+    visited[start] = True
+    frontier = np.array([start], dtype=np.int64)
+    while frontier.size:
+        starts, ends = indptr[frontier], indptr[frontier + 1]
+        if (ends - starts).sum() == 0:
+            break
+        out = np.concatenate([indices[s:e] for s, e in zip(starts, ends)])
+        out = out[active[out] & ~visited[out]]
+        out = np.unique(out)
+        visited[out] = True
+        frontier = out
+    return visited
+
+
+def host_bfs_driver(graph, trim_method="ac6"):
+    """Region-at-a-time FW-BW with host BFS — the seed ``scc_decompose``."""
+    indptr, indices = graph.to_numpy()
+    n = graph.n
+    fw_engine = plan(graph, method=trim_method)
+    gt = fw_engine.transpose
+    bw_engine = plan(gt, method=trim_method, transpose=graph)
+    t_indptr, t_indices = gt.to_numpy()
+
+    labels = np.full(n, -1, dtype=np.int64)
+    next_label = 0
+    worklist = [np.ones(n, dtype=bool)]
+    while worklist:
+        active = worklist.pop()
+        live = active & (labels < 0)
+        if not live.any():
+            continue
+        for engine in (fw_engine, bw_engine):
+            res = engine.run(active=live)
+            _ = res.edges_traversed          # seed driver always accumulated
+            dead = live & (np.asarray(res.status) == 0)
+            idx = np.nonzero(dead)[0]
+            if idx.size:
+                labels[idx] = next_label + np.arange(idx.size)
+                next_label += idx.size
+                live = live & ~dead
+            if not live.any():
+                break
+        if not live.any():
+            continue
+        pivot = int(np.argmax(live))
+        fw = _host_bfs_mask(indptr, indices, pivot, live)
+        bw = _host_bfs_mask(t_indptr, t_indices, pivot, live)
+        scc = fw & bw
+        labels[scc] = next_label
+        next_label += 1
+        for region in (fw & ~scc, bw & ~scc, live & ~fw & ~bw):
+            if region.any():
+                worklist.append(region)
+    return labels
+
+
+# -- measurement --------------------------------------------------------------
+
+def _timeit(fn, repeats):
+    fn()                                     # warm the jit caches
+    if repeats > 1:
+        fn()                                 # settle allocator/caches
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)) * 1e3
+
+
+def bench_family(name, kwargs, repeats):
+    factory, _ = generators.BENCHMARK_GRAPHS[name]
+    g = factory(**kwargs)
+    print(f"# {name}: n={g.n:,} m={g.m:,}", file=sys.stderr)
+
+    trim_engine = plan(g, method="ac6")
+
+    def trim_only():
+        np.asarray(trim_engine.run(counters=False).status)
+
+    def host():
+        return host_bfs_driver(g)
+
+    def batched():
+        return scc_decompose(g)[0]
+
+    # correctness cross-check before timing
+    labels_h, labels_b = host(), batched()
+    assert same_partition(labels_h, labels_b), name
+
+    row = {
+        "n": g.n, "m": g.m,
+        "sccs": int(len(np.unique(labels_b))),
+        "trim_only_ms": round(_timeit(trim_only, repeats), 2),
+        "host_bfs_ms": round(_timeit(host, repeats), 2),
+        "batched_ms": round(_timeit(batched, repeats), 2),
+    }
+    row["speedup_host_over_batched"] = round(
+        row["host_bfs_ms"] / max(row["batched_ms"], 1e-9), 2)
+    print(f"#   trim-only {row['trim_only_ms']:.1f}ms | host-BFS "
+          f"{row['host_bfs_ms']:.1f}ms | batched {row['batched_ms']:.1f}ms "
+          f"({row['speedup_host_over_batched']}x)", file=sys.stderr)
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny graphs, 1 repeat (CI)")
+    ap.add_argument("--repeats", type=int, default=5)
+    ap.add_argument("--out", default="BENCH_scc.json")
+    ap.add_argument("--families", nargs="*", default=None)
+    args = ap.parse_args()
+    sizes = SMOKE_SIZES if args.smoke else SIZES
+    repeats = 1 if args.smoke else args.repeats
+    families = args.families or list(sizes)
+
+    doc = {"bench": "scc", "smoke": args.smoke, "repeats": repeats,
+           "families": {}}
+    for name in families:
+        doc["families"][name] = bench_family(name, sizes[name], repeats)
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    print(json.dumps(doc, indent=2))
+    wins = all(r["batched_ms"] < r["host_bfs_ms"]
+               for r in doc["families"].values())
+    print(f"# batched driver beats host-BFS on every family: {wins}",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

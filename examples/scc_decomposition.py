@@ -1,4 +1,5 @@
-"""End-to-end driver: SCC decomposition with graph trimming (paper §1.1).
+"""End-to-end driver: batched SCC decomposition with graph trimming
+(paper §1.1).
 
     PYTHONPATH=src python examples/scc_decomposition.py
 
@@ -6,9 +7,11 @@ Reproduces the paper's Figure-1 scenario — two large SCCs connected by
 chains of trivial SCCs — then scales to a random digraph, showing how much
 of the work trimming removes before any FW-BW pivot search runs.
 
-The driver rides on the compile-once engine: the whole worklist of regions
-shares ONE transpose build and ONE kernel trace per direction
-(``stats["transpose_builds"]`` / ``stats["engine_traces"]`` report it).
+The driver is fully device-resident (DESIGN.md §8): per worklist
+generation it issues ONE batched trim dispatch and TWO batched reach
+dispatches (all pending regions advance together), the whole worklist
+shares ONE transpose build, and labels materialize once at the end —
+``stats`` reports the dispatch/trace/transpose accounting.
 """
 import sys
 
@@ -16,7 +19,7 @@ sys.path.insert(0, "src")
 
 import numpy as np
 
-from repro.core import CSRGraph, plan
+from repro.core import CSRGraph, plan, plan_reach
 from repro.core.scc import same_partition, scc_decompose, tarjan_oracle
 
 # --- paper Figure 1 analogue ------------------------------------------------
@@ -36,27 +39,35 @@ rng = np.random.default_rng(0)
 n, m = 20_000, 60_000
 g = CSRGraph.from_edges(n, rng.integers(0, n, m), rng.integers(0, n, m))
 for use_trim in (True, False):
-    labels, stats = scc_decompose(g, use_trim=use_trim, trim_method="ac6")
+    labels, stats = scc_decompose(g, use_trim=use_trim, trim_method="ac6",
+                                  counters=use_trim)
     n_sccs = len(np.unique(labels))
-    print(f"use_trim={use_trim}: {n_sccs:,} SCCs, pivots={stats['pivots']}, "
+    edges = stats["trim_edges_traversed"]
+    print(f"use_trim={use_trim}: {n_sccs:,} SCCs, "
+          f"generations={stats['generations']}, pivots={stats['pivots']}, "
           f"trimmed={stats['trimmed_total']:,}, "
-          f"trim_edges={stats['trim_edges_traversed']:,}, "
-          f"traces={stats['engine_traces']}, "
+          f"trim_edges={'off' if edges is None else f'{edges:,}'}, "
+          f"dispatches={stats['trim_dispatches']}+{stats['reach_dispatches']}"
+          f" (trim+reach), traces={stats['engine_traces']}, "
           f"transpose_builds={stats['transpose_builds']}")
 
 oracle = tarjan_oracle(*g.to_numpy())
 assert same_partition(labels, oracle)
 print("matches Tarjan oracle — trimming removed the trivial-SCC work "
-      "before any BFS pivot ran.")
+      "before any reach pivot ran.")
 
 # --- engine reuse outside the driver ----------------------------------------
-# the same engine serves ad-hoc region queries (e.g. an interactive client
-# re-trimming subsets) with zero retraces after the first call
+# the same engines serve ad-hoc queries (e.g. an interactive client
+# re-trimming subsets or asking reachability questions) with zero retraces
+# after the first call
 engine = plan(g, method="ac6")
+reach = plan_reach(g, transpose=engine.transpose)
 for keep in (0.8, 0.5, 0.2):
     mask = rng.random(n) < keep
     res = engine.run(active=mask)
     live = np.asarray(res.status).astype(bool)
     in_region = int(mask.sum() - (live & mask).sum())
+    r = reach.run(seeds=int(np.argmax(mask)), active=mask)
     print(f"re-trim {keep:.0%} region: {in_region:,} of {int(mask.sum()):,} "
-          f"trimmed (traces so far: {engine.traces})")
+          f"trimmed; {r.n_reached:,} reachable from its first vertex "
+          f"(traces so far: trim={engine.traces} reach={reach.traces})")

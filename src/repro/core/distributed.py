@@ -304,5 +304,5 @@ def trim_distributed(graph: CSRGraph, method: str = "ac6",
     from .engine import plan
     packed = method == "ac6_packed"
     eng = plan(graph, method="ac6" if packed else method, backend="sharded",
-               mesh=mesh, axis=axis, packed=packed)
+               mesh=mesh, axis=axis, packed=packed, unmasked=True)
     return eng.run().materialize()

@@ -13,6 +13,10 @@ that amortizes every per-call cost the old one-shot ``trim()`` paid:
 * results come back device-resident (:class:`TrimResult`) and only
   materialize counters on the host when asked.
 
+The transpose cache, trace attribution, and dispatch accounting live in
+:class:`~repro.core.enginebase.EngineBase`, shared with the reachability
+engine family (``core.reach``, DESIGN.md §8).
+
 Backends unify the three execution paths under one API:
 
     "dense"    — lockstep per-step probing (``common.probe_first_live``)
@@ -26,6 +30,12 @@ Example::
     for mask in regions:
         result = engine.run(active=mask)          # no retrace, no rebuild
     results = engine.run_batch(stacked_masks)     # one vmapped dispatch
+
+Configuration errors fail fast at ``plan()`` time: a (method, backend)
+combination that could not execute the calls the caller is allowed to
+make — e.g. sharded AC-4, whose induced-subgraph masks would need a
+global edge pass — raises immediately with the supported alternatives,
+instead of surfacing mid-worklist at ``run(active=...)`` time.
 """
 from __future__ import annotations
 
@@ -36,15 +46,11 @@ import numpy as np
 from . import ac3 as _ac3  # noqa: F401  (imports register the kernels)
 from . import ac4 as _ac4  # noqa: F401
 from . import ac6 as _ac6  # noqa: F401
+from .enginebase import _TRACE_COUNT, EngineBase
 from .graph import CSRGraph, TrimResult, row_ids, worker_of
 from .registry import available_methods, get_kernel
 
 BACKENDS = ("dense", "windowed", "sharded")
-
-# Process-wide count of kernel traces (bumped from inside traced functions,
-# i.e. exactly once per compilation).  Engines attribute deltas to
-# themselves around each dispatch; tests assert on it (DESIGN.md §7).
-_TRACE_COUNT = [0]
 
 
 @functools.lru_cache(maxsize=None)
@@ -75,37 +81,58 @@ def _local_runner(method: str, probe: str, window: int,
 def plan(graph: CSRGraph, method: str = "ac6", backend: str = "dense", *,
          workers: int = 1, chunk: int = 4096, window: int = 16,
          use_kernel: bool | None = None, transpose: CSRGraph | None = None,
-         mesh=None, axis="workers", packed: bool = False) -> "TrimEngine":
+         mesh=None, axis="workers", packed: bool = False,
+         unmasked: bool = False) -> "TrimEngine":
     """Build a :class:`TrimEngine` for ``graph``.
 
     ``transpose`` pre-seeds the engine's Gᵀ cache (e.g. the SCC driver
     already holds it); ``mesh``/``axis``/``packed`` configure the sharded
     backend (``packed`` exchanges a uint32 bitmap instead of a bool status
     vector in the per-round collective).
+
+    ``unmasked=True`` declares that the caller will never pass
+    ``active`` masks.  It is required for configurations that cannot trim
+    induced subgraphs (sharded AC-4) — without it, ``plan()`` raises
+    immediately rather than failing mid-worklist at ``run(active=...)``.
     """
     return TrimEngine(graph, method=method, backend=backend, workers=workers,
                       chunk=chunk, window=window, use_kernel=use_kernel,
                       transpose=transpose, mesh=mesh, axis=axis,
-                      packed=packed)
+                      packed=packed, unmasked=unmasked)
 
 
-class TrimEngine:
+class TrimEngine(EngineBase):
     """Compile-once trimming over one graph.  Build with :func:`plan`."""
 
     def __init__(self, graph, *, method, backend, workers, chunk, window,
-                 use_kernel, transpose, mesh, axis, packed):
+                 use_kernel, transpose, mesh, axis, packed,
+                 unmasked=False):
         self.spec = get_kernel(method)   # raises on unknown method
         if backend not in BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; expected one of "
                              f"{BACKENDS}")
         if backend == "sharded" and self.spec.sharded_method is None:
             raise ValueError(f"method {method!r} has no sharded kernels")
+        if backend == "sharded" and self.spec.sharded_method == "ac4" \
+                and not unmasked:
+            # fail fast at plan() time: this configuration can never run an
+            # active mask (induced out-degrees need a global edge pass), so
+            # accepting it here would only defer the failure to
+            # run(active=...) mid-worklist.
+            raise ValueError(
+                f"method {method!r} with backend='sharded' cannot trim "
+                "induced subgraphs (active masks): AC-4's counter "
+                "initialization needs a global edge pass. Use "
+                "method='ac3'/'ac6' with backend='sharded', pick the "
+                "'dense'/'windowed' backend for AC-4, or pass "
+                "unmasked=True to promise that run() is never called "
+                "with an active mask")
         if packed and (backend != "sharded"
                        or self.spec.sharded_method != "ac6"):
             raise ValueError(
                 "packed=True (uint32-bitmap status exchange) only applies "
                 "to method='ac6' with backend='sharded'")
-        self.graph = graph
+        super().__init__(graph, transpose=transpose)
         self.method = method
         self.backend = backend
         self.workers = workers
@@ -115,32 +142,12 @@ class TrimEngine:
         self.mesh = mesh
         self.axis = axis
         self.packed = packed
-        self._transpose = transpose
-        self._transpose_builds = 0
+        self.unmasked = unmasked
         self._tarrs = None
         self._worker_ids = None
         self._shard = None
-        self._traces = 0
 
     # -- cached resources --------------------------------------------------
-    @property
-    def transpose(self) -> CSRGraph:
-        """Gᵀ, built at most once (O(n+m) counting sort) and cached."""
-        if self._transpose is None:
-            self._transpose = self.graph.transpose()
-            self._transpose_builds += 1
-        return self._transpose
-
-    @property
-    def transpose_builds(self) -> int:
-        """How many times this engine actually built Gᵀ (0 or 1)."""
-        return self._transpose_builds
-
-    @property
-    def traces(self) -> int:
-        """Kernel traces this engine's dispatches caused (compile count)."""
-        return self._traces
-
     def _transpose_arrays(self):
         if not self.spec.needs_transpose:
             return None
@@ -156,6 +163,12 @@ class TrimEngine:
                 worker_of(self.graph.n, self.workers, self.chunk))
         return self._worker_ids
 
+    def _check_masked_call(self, active):
+        if active is not None and self.unmasked:
+            raise ValueError(
+                "this engine was planned with unmasked=True (no active "
+                "masks); plan() a maskable configuration instead")
+
     # -- execution ---------------------------------------------------------
     def run(self, active=None, counters: bool = True) -> TrimResult:
         """Trim (the ``active``-induced subgraph of) the planned graph.
@@ -167,6 +180,7 @@ class TrimEngine:
         result's exposure changes.  Either way ``edges_traversed`` /
         ``max_frontier`` / ``per_worker_edges`` are ``None``.
         """
+        self._check_masked_call(active)
         n, m = self.graph.n, self.graph.m
         if active is not None and np.shape(active) != (n,):
             raise ValueError(f"active mask must have shape ({n},), got "
@@ -181,13 +195,49 @@ class TrimEngine:
         fn = _local_runner(self.method, self._probe_kind(), self.window,
                            self.use_kernel, counters, self.workers,
                            batched=False)
-        before = _TRACE_COUNT[0]
-        status, rounds, pw, max_qp = fn(
-            self.graph.indptr, self.graph.indices, self._transpose_arrays(),
-            self._ids(), act)
-        self._traces += _TRACE_COUNT[0] - before
+        status, rounds, pw, max_qp = self._dispatch(
+            fn, self.graph.indptr, self.graph.indices,
+            self._transpose_arrays(), self._ids(), act)
         return TrimResult(status=status.astype(jnp.int32), rounds=rounds,
                           max_frontier=max_qp, per_worker_edges=pw)
+
+    def run_batch_stacked(self, active_masks, counters: bool = True):
+        """Trim B induced subgraphs in one vmapped dispatch, returning the
+        stacked device arrays directly as a 4-tuple
+        ``(status, per_worker_edges, rounds, max_frontier)``: (B, n) int32,
+        (B, P) int32, (B,) int32, (B,) int32 — the two counter entries are
+        ``None`` with ``counters=False``.  The batched SCC driver consumes
+        this form — it reduces across the batch on device, so per-row
+        :class:`TrimResult` views would only be sliced apart and
+        immediately restacked.  Use :meth:`run_batch` for per-region
+        results."""
+        if self.backend == "sharded":
+            raise NotImplementedError(
+                "run_batch is a single-device vmap; use the dense or "
+                "windowed backend (shard the batch at the caller instead)")
+        self._check_masked_call(active_masks)
+        import jax.numpy as jnp
+        masks = jnp.asarray(active_masks, bool)
+        if masks.ndim != 2 or masks.shape[1] != self.graph.n:
+            raise ValueError(f"active_masks must be (B, {self.graph.n}) "
+                             f"bool, got {masks.shape}")
+        n, m = self.graph.n, self.graph.m
+        if n == 0 or m == 0:
+            # rows follow _degenerate's conventions: no kernel dispatch,
+            # rounds = 0 (empty) / 2 (edgeless: kill + confirm)
+            b = masks.shape[0]
+            return (jnp.zeros((b, n), jnp.int32),
+                    jnp.zeros((b, self.workers), jnp.int32)
+                    if counters else None,
+                    jnp.full((b,), 0 if n == 0 else 2, jnp.int32),
+                    masks.sum(axis=1, dtype=jnp.int32) if counters else None)
+        fn = _local_runner(self.method, self._probe_kind(), self.window,
+                           self.use_kernel, counters, self.workers,
+                           batched=True)
+        status, rounds, pw, max_qp = self._dispatch(
+            fn, self.graph.indptr, self.graph.indices,
+            self._transpose_arrays(), self._ids(), masks)
+        return status.astype(jnp.int32), pw, rounds, max_qp
 
     def run_batch(self, active_masks, counters: bool = True):
         """Trim B induced subgraphs in one vmapped dispatch.
@@ -196,56 +246,43 @@ class TrimEngine:
         :class:`TrimResult`, equal element-wise to sequential ``run()``
         calls (counters included).
         """
-        if self.backend == "sharded":
-            raise NotImplementedError(
-                "run_batch is a single-device vmap; use the dense or "
-                "windowed backend (shard the batch at the caller instead)")
-        import jax.numpy as jnp
-        masks = jnp.asarray(active_masks, bool)
-        if masks.ndim != 2 or masks.shape[1] != self.graph.n:
-            raise ValueError(f"active_masks must be (B, {self.graph.n}) "
-                             f"bool, got {masks.shape}")
-        n, m = self.graph.n, self.graph.m
-        if n == 0 or m == 0:
-            return [self._degenerate(masks[i], counters)
-                    for i in range(masks.shape[0])]
-        fn = _local_runner(self.method, self._probe_kind(), self.window,
-                           self.use_kernel, counters, self.workers,
-                           batched=True)
-        before = _TRACE_COUNT[0]
-        status, rounds, pw, max_qp = fn(
-            self.graph.indptr, self.graph.indices, self._transpose_arrays(),
-            self._ids(), masks)
-        self._traces += _TRACE_COUNT[0] - before
-        return [TrimResult(status=status[i].astype(jnp.int32),
+        status, pw, rounds, max_qp = self.run_batch_stacked(
+            active_masks, counters=counters)
+        return [TrimResult(status=status[i],
                            rounds=rounds[i],
                            max_frontier=None if max_qp is None else max_qp[i],
                            per_worker_edges=None if pw is None else pw[i])
-                for i in range(masks.shape[0])]
+                for i in range(status.shape[0])]
 
     def _probe_kind(self):
         return ("windowed" if self.backend == "windowed"
                 and self.spec.supports_windowed else "dense")
 
-    # -- degenerate host paths (no kernel dispatch) ------------------------
+    # -- degenerate paths (no kernel dispatch, still device-resident) ------
     def _degenerate(self, active, counters):
+        """n == 0 or m == 0: the fixpoint is immediate, so no kernel runs —
+        but the result is device-resident jnp with the same dtypes as the
+        kernel path, so downstream code never branches on provenance."""
+        import jax.numpy as jnp
         n = self.graph.n
         npw = (self._num_shards() if self.backend == "sharded"
                else self.workers)
-        pw = np.zeros(npw, np.int64) if counters else None
+        pw = jnp.zeros((npw,), jnp.int32) if counters else None
         if n == 0:
-            return TrimResult(status=np.zeros(0, np.int32), rounds=0,
-                              edges_traversed=0 if counters else None,
-                              max_frontier=0 if counters else None,
+            return TrimResult(status=jnp.zeros((0,), jnp.int32),
+                              rounds=jnp.array(0, jnp.int32),
+                              max_frontier=(jnp.array(0, jnp.int32)
+                                            if counters else None),
                               per_worker_edges=pw)
         # no edges: every (active) vertex is a sink and dies in round one;
         # rounds follows the AC-3 convention (α + 1): one killing round,
         # one confirming round -> α = 1
-        act = (np.ones(n, bool) if active is None
-               else np.asarray(active, bool))
-        return TrimResult(status=np.zeros(n, np.int32), rounds=2,
-                          edges_traversed=0 if counters else None,
-                          max_frontier=int(act.sum()) if counters else None,
+        act = (jnp.ones((n,), bool) if active is None
+               else jnp.asarray(active, bool))
+        return TrimResult(status=jnp.zeros((n,), jnp.int32),
+                          rounds=jnp.array(2, jnp.int32),
+                          max_frontier=(act.sum(dtype=jnp.int32)
+                                        if counters else None),
                           per_worker_edges=pw)
 
     # -- sharded backend ---------------------------------------------------
@@ -299,20 +336,15 @@ class TrimEngine:
         n = self.graph.n
         num, n_pad = sh["num"], sh["n_pad"]
         if sh["kind"] == "ac4":
-            if active is not None:
-                raise NotImplementedError(
-                    "sharded AC-4 does not support active masks (induced "
-                    "out-degrees need a global edge pass); use ac3/ac6 or "
-                    "the dense backend")
+            # plan() only reaches here with unmasked=True, which run()
+            # already enforced — so active is None by construction
             args = sh["operands"]
         else:
             act = np.zeros(n_pad, bool)
             act[:n] = (True if active is None
                        else np.asarray(active, bool))
             args = (*sh["operands"], jnp.asarray(act.reshape(num, -1)))
-        before = _TRACE_COUNT[0]
-        status_l, edges, rounds, max_qp = sh["fn"](*args)
-        self._traces += _TRACE_COUNT[0] - before
+        status_l, edges, rounds, max_qp = self._dispatch(sh["fn"], *args)
         status = status_l.reshape(-1)[:n].astype(jnp.int32)
         return TrimResult(
             status=status, rounds=jnp.max(rounds),

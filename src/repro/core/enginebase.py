@@ -1,0 +1,86 @@
+"""Shared base for the compile-once engine families (DESIGN.md §1, §8).
+
+The repo has two engine families over the same lifecycle:
+
+* **trim**  (``core.engine.TrimEngine``)  — arc-consistency fixpoint
+  trimming, the paper's contribution;
+* **reach** (``core.reach.ReachEngine``)  — frontier-sweep reachability,
+  the primitive the paper's flagship application (FW-BW SCC, §1.1) spends
+  most of its time in.
+
+Both amortize the same per-call costs: a transpose built at most once
+(O(n+m) counting sort, pre-seedable so a FW/BW engine pair shares one
+build), a jitted kernel traced once per static configuration, and
+device-resident results.  This module holds the plumbing they share:
+
+* ``_TRACE_COUNT`` — process-wide count of kernel traces, bumped from
+  *inside* traced functions (i.e. exactly once per compilation).  Engines
+  attribute deltas to themselves around each dispatch.
+* ``EngineBase._dispatch`` — runs a jitted callable while attributing
+  traces and counting dispatches.  ``engine.dispatches`` is the number of
+  device dispatches the engine issued (degenerate host shortcuts do not
+  count); the batched SCC driver's per-generation contract — one trim
+  dispatch, two reach dispatches — is asserted against it (DESIGN.md §8).
+"""
+from __future__ import annotations
+
+from .graph import CSRGraph
+
+# Process-wide count of kernel traces (bumped from inside traced functions,
+# i.e. exactly once per compilation).  Engines attribute deltas to
+# themselves around each dispatch; tests assert on it (DESIGN.md §7).
+_TRACE_COUNT = [0]
+
+
+class EngineBase:
+    """Compile-once execution over one graph: transpose cache + accounting.
+
+    Subclasses implement ``plan``-style construction and ``run``/
+    ``run_batch`` execution; the base owns the resources every family
+    needs.
+    """
+
+    def __init__(self, graph: CSRGraph, *, transpose: CSRGraph | None = None):
+        self.graph = graph
+        self._transpose = transpose
+        self._transpose_builds = 0
+        self._traces = 0
+        self._dispatches = 0
+
+    # -- cached resources --------------------------------------------------
+    @property
+    def transpose(self) -> CSRGraph:
+        """Gᵀ, built at most once (O(n+m) counting sort) and cached."""
+        if self._transpose is None:
+            self._transpose = self.graph.transpose()
+            self._transpose_builds += 1
+        return self._transpose
+
+    @property
+    def transpose_builds(self) -> int:
+        """How many times this engine actually built Gᵀ (0 or 1)."""
+        return self._transpose_builds
+
+    # -- accounting --------------------------------------------------------
+    @property
+    def traces(self) -> int:
+        """Kernel traces this engine's dispatches caused (compile count)."""
+        return self._traces
+
+    @property
+    def dispatches(self) -> int:
+        """Device dispatches issued (each ``run`` = 1, each ``run_batch`` =
+        1 regardless of batch size; degenerate host shortcuts = 0)."""
+        return self._dispatches
+
+    def _dispatch(self, fn, *args):
+        """Call a jitted runner, attributing trace deltas and counting the
+        dispatch."""
+        before = _TRACE_COUNT[0]
+        out = fn(*args)
+        self._traces += _TRACE_COUNT[0] - before
+        self._dispatches += 1
+        return out
+
+
+__all__ = ["EngineBase", "_TRACE_COUNT"]

@@ -184,6 +184,14 @@ class TrimResult:
             self._pw = np.asarray(self._pw).astype(np.int64)
         return self._pw
 
+    @property
+    def per_worker_edges_device(self):
+        """Per-worker counters wherever the producer left them — no host
+        sync, no caching.  ``None`` when the run disabled counters.  The
+        batched SCC driver reduces these on device and transfers one
+        scalar per generation instead of one array per region."""
+        return self._pw
+
     def materialize(self) -> "TrimResult":
         """Force every field to the host (numpy status, python ints)."""
         self._status = np.asarray(self._status).astype(np.int32)

@@ -1,12 +1,19 @@
-"""Kernel registry: trimming method name -> :class:`KernelSpec`.
+"""Kernel registry: (engine family, method name) -> :class:`KernelSpec`.
 
 Replaces the historical ``if method == ...`` dispatch in ``core/trim.py``.
-Each algorithm module (``ac3.py``, ``ac4.py``, ``ac6.py``) registers its
-spec at import time; the engine (``core/engine.py``) resolves a method name
-once at plan time and never branches on strings in the hot path again
-(DESIGN.md §3).
+The registry is namespaced by engine *family* so the two compile-once
+engine layers resolve their kernels through one mechanism (DESIGN.md §3):
 
-A spec's ``run`` adapter has one uniform signature so every method is
+* family ``"trim"``  — the paper's arc-consistency algorithms.  Each
+  algorithm module (``ac3.py``, ``ac4.py``, ``ac6.py``) registers its spec
+  at import time; ``core/engine.py`` resolves a method name once at plan
+  time and never branches on strings in the hot path again.
+* family ``"reach"`` — frontier-sweep reachability primitives
+  (``core/reach.py``): ``"push"`` (scatter over out-edges) and ``"pull"``
+  (windowed gather over in-edges through the ``frontier_expand`` Pallas
+  kernel).
+
+A trim spec's ``run`` adapter has one uniform signature so every method is
 interchangeable under ``jax.jit`` / ``jax.vmap``::
 
     run(graph_arrays, transpose_arrays, worker_ids, workers, active, *,
@@ -17,6 +24,16 @@ where ``graph_arrays = (indptr, indices)``, ``transpose_arrays`` is
 ``(t_indptr, t_indices, t_rows)`` for methods with ``needs_transpose``
 (``None`` otherwise), and ``per_worker`` / ``max_qp`` are ``None`` when
 ``counters=False`` (the fast path that skips counter accumulation).
+
+A reach spec's ``run`` adapter (family ``"reach"``) is::
+
+    run(graph_arrays, transpose_arrays, seeds, active, *,
+        window, use_kernel, batched)
+      -> (reached, rounds)
+
+with ``graph_arrays = (indptr, indices, edge_src)`` and
+``transpose_arrays = (t_indptr, t_indices)`` (``None`` unless
+``needs_transpose``).
 """
 from __future__ import annotations
 
@@ -26,10 +43,11 @@ from typing import Callable, Optional
 
 @dataclasses.dataclass(frozen=True)
 class KernelSpec:
-    """One registered trimming method.
+    """One registered kernel method.
 
-    name:             public method name ("ac3", "ac4", "ac4*", "ac6")
-    run:              uniform adapter (see module docstring)
+    name:             public method name ("ac3", ..., "push", "pull")
+    run:              uniform adapter (see module docstring; the signature
+                      depends on the family the spec is registered under)
     needs_transpose:  dense/windowed execution reads Gᵀ arrays
     supports_windowed: honors the windowed-probe backend (counter-based
                       methods like AC-4 never probe, so the flag is False
@@ -45,23 +63,25 @@ class KernelSpec:
     sharded_method: Optional[str] = None
 
 
-_REGISTRY: dict[str, KernelSpec] = {}
+_REGISTRY: dict[tuple[str, str], KernelSpec] = {}
 
 
-def register_kernel(spec: KernelSpec) -> KernelSpec:
-    if spec.name in _REGISTRY:
-        raise ValueError(f"kernel {spec.name!r} already registered")
-    _REGISTRY[spec.name] = spec
+def register_kernel(spec: KernelSpec, family: str = "trim") -> KernelSpec:
+    key = (family, spec.name)
+    if key in _REGISTRY:
+        raise ValueError(f"kernel {spec.name!r} already registered in "
+                         f"family {family!r}")
+    _REGISTRY[key] = spec
     return spec
 
 
-def get_kernel(name: str) -> KernelSpec:
+def get_kernel(name: str, family: str = "trim") -> KernelSpec:
     try:
-        return _REGISTRY[name]
+        return _REGISTRY[(family, name)]
     except KeyError:
         raise ValueError(f"unknown method {name!r}; expected one of "
-                         f"{available_methods()}") from None
+                         f"{available_methods(family)}") from None
 
 
-def available_methods() -> tuple[str, ...]:
-    return tuple(sorted(_REGISTRY))
+def available_methods(family: str = "trim") -> tuple[str, ...]:
+    return tuple(sorted(n for f, n in _REGISTRY if f == family))

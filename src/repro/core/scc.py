@@ -1,23 +1,42 @@
 """SCC decomposition by Forward-Backward (FW-BW) search with graph trimming
-— the paper's flagship application (§1.1, refs [30,29,54,32,11]).
+— the paper's flagship application (§1.1, refs [30,29,54,32,11]) — as a
+batched, device-resident multi-pivot driver.
 
 Trimming removes size-1 SCCs in bulk *before* pivot searches: a vertex with
 no live successor (or, symmetrically, no live predecessor) cannot lie on a
-cycle, so it is its own SCC.  FW-BW then peels off one large SCC per pivot:
+cycle, so it is its own SCC.  FW-BW then peels off one SCC per pivot:
 SCC(pivot) = FW(pivot) ∩ BW(pivot), and recurses on the three remaining
 regions.  BFS reachability is a frontier sweep over CSR — parallelizable
 without difficulty, unlike DFS (paper §1.1).
 
-The recursion/worklist lives on the host; each trim / BFS step is a
-vectorized (jit-able) whole-graph pass.  This mirrors the paper's usage: a
-driver calls bulk-parallel primitives.
+The driver advances the worklist in *generations*: all pending regions
+(pairwise disjoint by construction) are stacked into (B, n) masks and
+drained at once —
 
-The driver holds TWO compile-once engines (``core.engine.plan``) for the
-whole worklist — forward over G and backward over Gᵀ — so the transpose is
-built exactly once (shared with the BFS arrays) and each trim method is
-traced exactly once per graph shape, no matter how many regions the
-worklist produces.  Gᵀ has G's exact array shapes, so both engines even
-share one compiled executable.
+* one batched :meth:`TrimEngine.run_batch_stacked` for the trim phase
+  (forward on odd generations, backward on even ones, so both directions
+  contribute over the run),
+* one batched :meth:`ReachEngine.run_batch` each for FW and BW, so B
+  pivots advance in one vmapped dispatch per direction.
+
+Worklists wider than ``max_batch`` regions are drained in equal pow2
+chunks — one dispatch per chunk — so a single dispatch's device
+footprint stays bounded on branchy SCC trees.
+
+No host-side edge traversal remains: reachability runs inside the same
+compiled substrate as trimming (``core.reach``, DESIGN.md §8), labels stay
+device-resident until the single materialization at the end, and the host
+only steers (region bookkeeping, pivot picking — O(Bn) mask work).
+
+The four engines (trim FW/BW, reach FW/BW) share one transpose build: the
+backward engines sweep Gᵀ with their own caches pre-seeded with G, and Gᵀ
+has G's exact array shapes, so each kernel is traced once per batch width
+— except when G's max in-degree and max out-degree fall on opposite sides
+of the reach window, where the two directions compile different pull
+bodies (see ``reach.py``) and trace separately.
+Per worklist generation the driver issues exactly one batched trim
+dispatch and two batched reach dispatches (asserted against the engines'
+``dispatches`` counters in the tests).
 """
 from __future__ import annotations
 
@@ -25,101 +44,190 @@ import numpy as np
 
 from .engine import plan
 from .graph import CSRGraph
+from .reach import plan_reach
 
 
-def _bfs_mask(indptr, indices, start: int, active: np.ndarray) -> np.ndarray:
-    """Vertices reachable from ``start`` within ``active`` (numpy frontier)."""
-    n = len(indptr) - 1
-    visited = np.zeros(n, dtype=bool)
-    if not active[start]:
-        return visited
-    visited[start] = True
-    frontier = np.array([start], dtype=np.int64)
-    while frontier.size:
-        # gather all out-edges of the frontier
-        starts, ends = indptr[frontier], indptr[frontier + 1]
-        total = (ends - starts).sum()
-        if total == 0:
-            break
-        out = np.concatenate([indices[s:e] for s, e in zip(starts, ends)])
-        out = out[active[out] & ~visited[out]]
-        out = np.unique(out)
-        visited[out] = True
-        frontier = out
-    return visited
+def _pad_pow2(masks: np.ndarray) -> np.ndarray:
+    """Pad a (B, n) mask stack with all-False rows up to the next power of
+    two.  Batch width is a compile-time shape under vmap, so padding bounds
+    the number of distinct executables per graph shape to log2(max B)
+    instead of one per worklist width; the padded rows are empty regions
+    and flow through trim/reach as no-ops."""
+    b = masks.shape[0]
+    bp = 1 << (b - 1).bit_length()
+    if bp == b:
+        return masks
+    return np.concatenate(
+        [masks, np.zeros((bp - b, masks.shape[1]), dtype=masks.dtype)])
+
+
+def _chunks(masks, max_batch: int):
+    """Split a pow2-padded (B, n) stack into at most ``max_batch``-row
+    chunks.  B is a power of two, so every chunk is exactly ``max_batch``
+    rows (or the single whole stack): the number of distinct compiled
+    batch widths stays bounded, and so does the device memory of one
+    vmapped dispatch (the per-round intermediates scale with the chunk's
+    B, not the worklist's)."""
+    b = masks.shape[0]
+    if b <= max_batch:
+        return [masks]
+    return [masks[i:i + max_batch] for i in range(0, b, max_batch)]
 
 
 def scc_decompose(graph: CSRGraph, use_trim: bool = True,
                   trim_method: str = "ac6", trim_transpose: bool = True,
-                  max_pivots: int = 1_000_000, trim_backend: str = "dense"):
-    """Return (labels, stats). labels: (n,) int64 component ids (dense)."""
-    indptr, indices = graph.to_numpy()
+                  max_pivots: int = 1_000_000, trim_backend: str = "dense",
+                  reach_backend: str = "windowed", window: int = 16,
+                  counters: bool = False, max_batch: int = 1024):
+    """Return (labels, stats). labels: (n,) int64 component ids (dense).
+
+    ``trim_transpose=False`` restricts trimming to the forward direction
+    on every generation.  ``counters=True`` additionally accumulates
+    ``stats["trim_edges_traversed"]`` (the paper's traversal metric) at
+    the cost of counter accumulation inside the trim kernels.
+    ``stats["trim_passes"]`` counts per-region directional trim passes
+    executed — each pending region gets exactly one pass per generation,
+    in that generation's alternating direction (the old region-at-a-time
+    driver ran up to two directions per region, so the two metrics are
+    not comparable).
+
+    ``reach_backend`` defaults to "windowed" (the pull sweep through the
+    ``frontier_expand`` kernel): it is gather-based, which measures
+    uniformly faster than the push scatter on CPU XLA and is the
+    block-skipping Pallas path on TPU.  The transpose it needs is the one
+    the driver already shares with the backward engines, so the choice
+    costs no extra build.
+
+    ``max_batch`` caps the batch width of a single device dispatch: a
+    generation whose worklist outgrows it is drained in ``B/max_batch``
+    equal chunks (B is pow2-padded), bounding the vmapped sweep's
+    per-round intermediates — without it a branchy SCC tree could stack
+    tens of thousands of (n,) regions into one dispatch.  Worklists up to
+    ``max_batch`` regions keep the one-trim-two-reach dispatch contract
+    per generation.
+    """
+    import jax.numpy as jnp
+
     n = graph.n
+    stats = {"generations": 0, "trim_passes": 0, "trimmed_total": 0,
+             "pivots": 0, "trim_dispatches": 0, "reach_dispatches": 0,
+             "trim_edges_traversed": 0 if counters else None,
+             "engine_traces": 0, "transpose_builds": 1}
+    if n == 0:
+        return np.zeros(0, np.int64), stats
+    if trim_backend == "sharded":
+        raise ValueError(
+            "the batched SCC driver needs a batchable trim backend "
+            "('dense' or 'windowed'); shard at the region level instead")
+    if max_batch < 1 or max_batch & (max_batch - 1):
+        raise ValueError(f"max_batch must be a positive power of two, "
+                         f"got {max_batch}")
 
+    # four engines, one transpose build: the backward pair sweeps Gᵀ with
+    # its transpose cache pre-seeded with G itself
     if use_trim:
-        # one engine per direction, reused across the whole worklist; the
-        # backward engine's transpose cache is pre-seeded with G itself
-        fw_engine = plan(graph, method=trim_method, backend=trim_backend)
-        gt = fw_engine.transpose          # built once, shared with the BFS
-        bw_engine = plan(gt, method=trim_method, backend=trim_backend,
-                         transpose=graph)
+        fw_trim = plan(graph, method=trim_method, backend=trim_backend,
+                       window=window)
+        gt = fw_trim.transpose           # the one and only build
+        bw_trim = plan(gt, method=trim_method, backend=trim_backend,
+                       window=window, transpose=graph)
     else:
-        fw_engine = bw_engine = None
+        fw_trim = bw_trim = None
         gt = graph.transpose()
-    t_indptr, t_indices = gt.to_numpy()
+    fw_reach = plan_reach(graph, backend=reach_backend, window=window,
+                          transpose=gt)
+    bw_reach = plan_reach(gt, backend=reach_backend, window=window,
+                          transpose=graph)
 
-    labels = np.full(n, -1, dtype=np.int64)
+    labels = jnp.full((n,), -1, jnp.int32)   # device-resident until the end
     next_label = 0
-    stats = {"trim_passes": 0, "trimmed_total": 0, "pivots": 0,
-             "trim_edges_traversed": 0, "engine_traces": 0,
-             "transpose_builds": 1}
+    regions = [np.ones(n, dtype=bool)]
 
-    worklist = [np.ones(n, dtype=bool)]
-    while worklist:
-        active = worklist.pop()
-        live = active & (labels < 0)
-        if not live.any():
-            continue
+    while regions:
+        stats["generations"] += 1
+        n_regions = len(regions)
+        live_host = _pad_pow2(np.stack(regions))          # (B, n), disjoint
+        regions = []
 
         if use_trim:
-            # forward pass: no live successor => size-1 SCC
-            for engine, label_tag in ((fw_engine, "fw"), (bw_engine, "bw")):
-                if label_tag == "bw" and not trim_transpose:
-                    continue
-                res = engine.run(active=live)
-                stats["trim_passes"] += 1
-                stats["trim_edges_traversed"] += res.edges_traversed
-                dead = live & (np.asarray(res.status) == 0)
-                idx = np.nonzero(dead)[0]
-                if idx.size:
-                    labels[idx] = next_label + np.arange(idx.size)
-                    next_label += idx.size
-                    stats["trimmed_total"] += idx.size
-                    live = live & ~dead
-                if not live.any():
-                    break
-            if not live.any():
-                continue
+            # one batched dispatch (per max_batch chunk) trims every
+            # pending region; directions alternate by generation so
+            # source- and sink-like trivial SCCs both peel without a
+            # second dispatch
+            engine = (fw_trim if stats["generations"] % 2 == 1
+                      or not trim_transpose else bw_trim)
+            parts = [engine.run_batch_stacked(jnp.asarray(c),
+                                              counters=counters)
+                     for c in _chunks(live_host, max_batch)]
+            stats["trim_passes"] += n_regions
+            if counters:
+                # reduce per region on device (int32, the kernels' own
+                # accumulator width), one (B,) transfer per generation,
+                # cross-region sum in int64 on the host
+                per_region = jnp.concatenate(
+                    [p[1].sum(axis=1) for p in parts])[:n_regions]
+                stats["trim_edges_traversed"] += int(
+                    np.asarray(per_region).sum(dtype=np.int64))
+            status = jnp.concatenate([p[0] for p in parts]) != 0
+            live = jnp.asarray(live_host)
+            dead = live & ~status
+            live = live & status
+            # regions are disjoint, so the union keeps one label per vertex
+            dead_union = jnp.any(dead, axis=0)
+            # one device->host transfer serves both the label counter and
+            # the worklist bookkeeping below
+            blob = np.asarray(jnp.concatenate([dead_union[None], live]))
+            dead_host, live_host = blob[0], blob[1:]
+            k = int(dead_host.sum())
+            if k:
+                rank = jnp.cumsum(dead_union.astype(jnp.int32)) - 1
+                labels = jnp.where(dead_union, next_label + rank, labels)
+                next_label += k
+                stats["trimmed_total"] += k
+        keep = np.nonzero(live_host.any(axis=1))[0]
+        if keep.size == 0:
+            continue
+        live_host = _pad_pow2(live_host[keep])
+        B = keep.size                       # real regions; the rest is pad
 
-        pivot = int(np.argmax(live))   # first live vertex
-        stats["pivots"] += 1
+        # one pivot per surviving region: its first live vertex
+        pivots = live_host[:B].argmax(axis=1)
+        stats["pivots"] += B
         if stats["pivots"] > max_pivots:
             raise RuntimeError("scc_decompose: pivot budget exceeded")
-        fw = _bfs_mask(indptr, indices, pivot, live)
-        bw = _bfs_mask(t_indptr, t_indices, pivot, live)
-        scc = fw & bw
-        labels[scc] = next_label
-        next_label += 1
-        rest = live & ~fw & ~bw
-        for region in (fw & ~scc, bw & ~scc, rest):
-            if region.any():
-                worklist.append(region)
+        seeds = np.zeros_like(live_host)
+        seeds[np.arange(B), pivots] = True
 
+        # all B pivots advance together: one vmapped dispatch per
+        # direction (per max_batch chunk)
+        def sweep(reach):
+            return jnp.concatenate(
+                [reach.run_batch(s, a).mask
+                 for s, a in zip(_chunks(seeds, max_batch),
+                                 _chunks(live_host, max_batch))])[:B]
+        fw = sweep(fw_reach)
+        bw = sweep(bw_reach)
+        live = jnp.asarray(live_host[:B])
+        scc = fw & bw
+        scc_ids = next_label + jnp.arange(B, dtype=jnp.int32)
+        owner = jnp.max(jnp.where(scc, scc_ids[:, None], -1), axis=0)
+        labels = jnp.where(owner >= 0, owner, labels)
+        next_label += B
+
+        children = np.asarray(jnp.concatenate(
+            [fw & ~scc, bw & ~scc, live & ~fw & ~bw]))
+        regions = [m for m in children if m.any()]
+
+    labels = np.asarray(labels).astype(np.int64)   # the one materialization
     assert (labels >= 0).all()
+    engines = [e for e in (fw_trim, bw_trim, fw_reach, bw_reach)
+               if e is not None]
+    stats["engine_traces"] = sum(e.traces for e in engines)
+    stats["transpose_builds"] = (sum(e.transpose_builds for e in engines)
+                                 + (0 if use_trim else 1))
     if use_trim:
-        stats["engine_traces"] = fw_engine.traces + bw_engine.traces
-        stats["transpose_builds"] = (fw_engine.transpose_builds
-                                     + bw_engine.transpose_builds)
+        stats["trim_dispatches"] = fw_trim.dispatches + bw_trim.dispatches
+    stats["reach_dispatches"] = fw_reach.dispatches + bw_reach.dispatches
     return labels, stats
 
 

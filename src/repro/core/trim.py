@@ -29,7 +29,8 @@ def trim(graph: CSRGraph, method: str = "ac6", workers: int = 1,
          counters: bool = True) -> TrimResult:
     """``active``: optional (n,) bool mask — trim the induced subgraph."""
     engine = plan(graph, method=method, backend=backend, workers=workers,
-                  chunk=chunk, transpose=transpose)
+                  chunk=chunk, transpose=transpose,
+                  unmasked=active is None)
     return engine.run(active=active, counters=counters).materialize()
 
 

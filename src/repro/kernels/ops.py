@@ -11,6 +11,7 @@ import jax
 
 from . import ref
 from .first_live_scan import first_live_scan as _fls
+from .frontier_expand import frontier_expand as _fex
 from .flash_attention import flash_attention as _fa
 from .segment_reduce import segment_sum_pallas as _ssp
 
@@ -57,3 +58,12 @@ def first_live_scan(flags, valid, active, use_kernel: bool | None = None,
     if use_kernel:
         return _fls(flags, valid, active, interpret=not on_tpu(), **kw)
     return ref.first_live_ref(flags, valid, active)
+
+
+def frontier_expand(flags, valid, pending, use_kernel: bool | None = None,
+                    **kw):
+    if use_kernel is None:
+        use_kernel = on_tpu()
+    if use_kernel:
+        return _fex(flags, valid, pending, interpret=not on_tpu(), **kw)
+    return ref.frontier_expand_ref(flags, valid, pending)

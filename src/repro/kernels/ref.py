@@ -91,6 +91,11 @@ def segment_sum_ref(values, seg_ids, num_segments: int):
     return jax.ops.segment_sum(vals, ids, num_segments=num_segments)
 
 
+def frontier_expand_ref(flags, valid, pending):
+    """Row-wise masked OR — the jnp twin of ``kernels.frontier_expand``."""
+    return pending & jnp.any(flags & valid, axis=1)
+
+
 def first_live_ref(flags, valid, active):
     n, window = flags.shape
     f = flags & valid

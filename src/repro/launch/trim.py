@@ -11,6 +11,8 @@ if "--dryrun" in __import__("sys").argv:
     PYTHONPATH=src python -m repro.launch.trim --graph BA --backend sharded
     # production-mesh dry-run (512 virtual chips):
     PYTHONPATH=src python -m repro.launch.trim --dryrun --method ac6
+    # the flagship application (batched device-resident FW-BW SCC driver):
+    PYTHONPATH=src python -m repro.launch.trim --app scc --graph BA
 
 Serving goes through the compile-once engine: ``plan()`` once, then every
 ``run()`` reuses the cached transpose and compiled kernel — the first/steady
@@ -25,7 +27,10 @@ def run_local(graph_name: str, method: str, workers: int,
     from ..core.engine import plan
     from ..graphs import make
     g = make(graph_name)
-    engine = plan(g, method=method, backend=backend, workers=workers)
+    # this entrypoint never passes active masks, so declare it: sharded
+    # AC-4 (maskless-only) stays servable here
+    engine = plan(g, method=method, backend=backend, workers=workers,
+                  unmasked=True)
     t0 = time.time()
     res = engine.run().materialize()
     t_first = time.time() - t0
@@ -39,6 +44,35 @@ def run_local(graph_name: str, method: str, workers: int,
           f"first={t_first:.2f}s steady={t_steady*1e3:.1f}ms "
           f"traces={engine.traces}")
     return res
+
+
+def run_scc(graph_name: str, method: str, backend: str = "dense",
+            reach_backend: str = "windowed"):
+    """The paper's flagship application on the device-resident batched
+    driver (DESIGN.md §8): per worklist generation one batched trim
+    dispatch + two batched reach dispatches, labels materialized once."""
+    import numpy as np
+
+    from ..core.scc import scc_decompose
+    from ..graphs import make
+    g = make(graph_name)
+    t0 = time.time()
+    labels, stats = scc_decompose(g, trim_method=method,
+                                  trim_backend=backend,
+                                  reach_backend=reach_backend)
+    t_first = time.time() - t0
+    t0 = time.time()
+    labels, stats = scc_decompose(g, trim_method=method,
+                                  trim_backend=backend,
+                                  reach_backend=reach_backend)
+    t_steady = time.time() - t0   # jit caches are process-wide: warm pass
+    print(f"[scc] {graph_name} n={g.n} m={g.m} trim={method}/{backend} "
+          f"reach={reach_backend}: {len(np.unique(labels)):,} SCCs, "
+          f"generations={stats['generations']} pivots={stats['pivots']} "
+          f"trimmed={stats['trimmed_total']:,} "
+          f"dispatches={stats['trim_dispatches']}+{stats['reach_dispatches']}"
+          f" | first={t_first:.2f}s steady={t_steady*1e3:.1f}ms")
+    return labels, stats
 
 
 def run_dryrun(method: str):
@@ -86,9 +120,17 @@ def main():
     ap.add_argument("--backend", default="dense",
                     choices=("dense", "windowed", "sharded"))
     ap.add_argument("--dryrun", action="store_true")
+    ap.add_argument("--app", default="trim", choices=("trim", "scc"))
+    ap.add_argument("--reach-backend", default="windowed",
+                    choices=("dense", "windowed"))
     args = ap.parse_args()
+    if args.app == "scc" and args.backend == "sharded":
+        ap.error("--app scc needs a batchable trim backend "
+                 "(--backend dense or windowed); shard at the region level")
     if args.dryrun:
         run_dryrun(args.method)
+    elif args.app == "scc":
+        run_scc(args.graph, args.method, args.backend, args.reach_backend)
     else:
         run_local(args.graph, args.method, args.workers, args.backend)
 

@@ -9,8 +9,8 @@ shapes no other test produces.
 import numpy as np
 import pytest
 
-from repro.core import (CSRGraph, available_methods, peeling_alpha_oracle,
-                        plan, trim, trim_oracle)
+from repro.core import (CSRGraph, available_methods, get_kernel,
+                        peeling_alpha_oracle, plan, trim, trim_oracle)
 from repro.core.engine import BACKENDS
 from repro.core.scc import same_partition, scc_decompose, tarjan_oracle
 from repro.graphs import barabasi_albert
@@ -171,7 +171,9 @@ def test_sharded_backend_matches_oracle():
     g = random_graph(8, n=77)
     oracle = trim_oracle(*g.to_numpy())
     for method in METHODS:
-        engine = plan(g, method=method, backend="sharded")
+        unmasked = get_kernel(method).sharded_method == "ac4"
+        engine = plan(g, method=method, backend="sharded",
+                      unmasked=unmasked)
         res = engine.run()
         assert (np.asarray(res.status).astype(bool) == oracle).all(), method
     # active masks on the status-exchange methods
@@ -183,9 +185,60 @@ def test_sharded_backend_matches_oracle():
             == induced_oracle(g, active)).all()
     assert engine.traces == 1
     with pytest.raises(NotImplementedError):
-        plan(g, method="ac4", backend="sharded").run(active=active)
-    with pytest.raises(NotImplementedError):
         engine.run_batch(np.ones((2, g.n), bool))
+
+
+# -- fail-fast config validation ----------------------------------------------
+
+def test_plan_fails_fast_on_unmaskable_config():
+    """plan(method='ac4', backend='sharded') can never run an active mask —
+    it must raise at plan() time, not mid-worklist at run(active=...)."""
+    g = random_graph(8, n=77)
+    for method in ("ac4", "ac4*"):
+        with pytest.raises(ValueError, match="cannot trim induced"):
+            plan(g, method=method, backend="sharded")
+    # the unmasked=True escape hatch keeps the maskless path working but
+    # turns a masked run() into an immediate error
+    engine = plan(g, method="ac4", backend="sharded", unmasked=True)
+    with pytest.raises(ValueError, match="unmasked=True"):
+        engine.run(active=np.ones(g.n, bool))
+    # the shim infers the promise from its own arguments
+    from repro.core import trim
+    with pytest.raises(ValueError, match="cannot trim induced"):
+        trim(g, method="ac4", backend="sharded", active=np.ones(g.n, bool))
+
+
+# -- degenerate paths are device-resident -------------------------------------
+
+@pytest.mark.parametrize("method", METHODS)
+def test_degenerate_results_device_resident(method):
+    """n=0 / m=0 shortcuts must return the same types/dtypes as the kernel
+    path: device-resident jnp status, so downstream code never branches on
+    provenance."""
+    import jax
+
+    # kernel path reference: masked-empty on a real graph
+    g = random_graph(10, n=24)
+    kernel_res = plan(g, method=method, workers=2).run(
+        active=np.zeros(g.n, bool))
+    assert isinstance(kernel_res.status, jax.Array)
+    for gd in (CSRGraph.from_edges(0, [], []),
+               CSRGraph.from_edges(7, [], [])):
+        engine = plan(gd, method=method, workers=2)
+        res = engine.run()
+        assert isinstance(res.status, jax.Array)
+        assert res.status.dtype == kernel_res.status.dtype
+        assert res.status.shape == (gd.n,)
+        assert isinstance(res.per_worker_edges, np.ndarray)  # lazy host view
+        assert (res.per_worker_edges
+                == np.zeros(2, np.int64)).all()
+        assert res.per_worker_edges.dtype \
+            == kernel_res.per_worker_edges.dtype
+        assert type(res.rounds) is type(kernel_res.rounds) is int
+        assert engine.dispatches == 0    # no kernel ran
+        fast = engine.run(counters=False)
+        assert fast.per_worker_edges is None
+        assert fast.edges_traversed is None
 
 
 # -- shim compatibility -------------------------------------------------------
@@ -229,6 +282,9 @@ def test_scc_single_transpose_and_trace(monkeypatch):
     assert stats["transpose_builds"] == 1
     assert stats["engine_traces"] <= 1      # one jit trace per (method, shape)
     assert stats["trimmed_total"] == 10_000  # BA construction graph is a DAG
+    assert stats["pivots"] == 0              # ...so no reach dispatch ran
+    assert stats["reach_dispatches"] == 0
+    assert stats["trim_dispatches"] == stats["generations"] == 1
     assert (np.unique(labels) == np.arange(10_000)).all()
 
 

@@ -8,6 +8,7 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.first_live_scan import first_live_scan
 from repro.kernels.flash_attention import flash_attention
+from repro.kernels.frontier_expand import frontier_expand
 from repro.kernels.segment_reduce import segment_sum_pallas
 
 RNG = np.random.default_rng(0)
@@ -68,3 +69,19 @@ def test_first_live_scan(n, W, bv):
                              interpret=True)
     f2, d2 = ref.first_live_ref(flags, valid, active)
     assert (f1 == f2).all() and (d1 == d2).all()
+
+
+@pytest.mark.parametrize("n,W,bv", [(333, 16, 128), (64, 8, 64),
+                                    (1024, 32, 256), (7, 4, 256)])
+def test_frontier_expand(n, W, bv):
+    flags = jnp.asarray(RNG.random((n, W)) < 0.2)
+    valid = jnp.asarray(RNG.random((n, W)) < 0.8)
+    pending = jnp.asarray(RNG.random(n) < 0.5)
+    got = frontier_expand(flags, valid, pending, block_v=bv, interpret=True)
+    want = ref.frontier_expand_ref(flags, valid, pending)
+    assert got.dtype == want.dtype == jnp.bool_
+    assert (got == want).all()
+    # block skipping: a fully non-pending input produces all-False
+    none = frontier_expand(flags, valid, jnp.zeros(n, bool), block_v=bv,
+                           interpret=True)
+    assert not bool(none.any())

@@ -1,0 +1,190 @@
+"""Compile-once ReachEngine: frontier-sweep reachability (DESIGN.md §8).
+
+Deterministic (no hypothesis) so this coverage survives even when the
+optional property-testing dep is absent.  Mirrors test_engine.py: oracle
+equivalence, compile-once accounting, batch/sequential parity, degenerate
+device residency.
+"""
+import numpy as np
+import pytest
+
+from repro.core import CSRGraph, available_methods, plan_reach
+from repro.core.reach import REACH_BACKENDS
+
+BACKEND_PARAMS = tuple(REACH_BACKENDS)
+
+
+def random_graph(seed, n, factor=3):
+    rng = np.random.default_rng(seed)
+    m = factor * n
+    return CSRGraph.from_edges(n, rng.integers(0, n, m),
+                               rng.integers(0, n, m))
+
+
+def bfs_oracle(g: CSRGraph, start: int, active=None) -> np.ndarray:
+    indptr, indices = g.to_numpy()
+    n = g.n
+    act = np.ones(n, bool) if active is None else np.asarray(active, bool)
+    visited = np.zeros(n, bool)
+    if not act[start]:
+        return visited
+    visited[start] = True
+    frontier = [start]
+    while frontier:
+        nxt = []
+        for u in frontier:
+            for w in indices[indptr[u]:indptr[u + 1]]:
+                if act[w] and not visited[w]:
+                    visited[w] = True
+                    nxt.append(w)
+        frontier = nxt
+    return visited
+
+
+# -- registry -----------------------------------------------------------------
+
+def test_reach_family_registered():
+    assert set(available_methods("reach")) == {"push", "pull"}
+    # the families are namespaced: trim methods are not reach methods
+    assert "ac6" not in available_methods("reach")
+    assert "push" not in available_methods("trim")
+
+
+def test_unknown_backend_raises():
+    g = random_graph(0, n=10)
+    with pytest.raises(ValueError, match="unknown backend"):
+        plan_reach(g, backend="carrier-pigeon")
+
+
+# -- oracle equivalence -------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKEND_PARAMS)
+def test_reach_matches_bfs_oracle(backend):
+    g = random_graph(20, n=80)
+    rng = np.random.default_rng(20)
+    engine = plan_reach(g, backend=backend, window=4)
+    for trial in range(4):
+        active = rng.random(g.n) < (0.5 + 0.5 * (trial % 2))
+        start = int(rng.integers(0, g.n))
+        res = engine.run(seeds=start, active=active)
+        assert (np.asarray(res.mask)
+                == bfs_oracle(g, start, active)).all(), (backend, trial)
+    # full graph, seed-mask form, multiple seeds = union of single-seed BFS
+    seeds = np.zeros(g.n, bool)
+    seeds[[3, 40]] = True
+    res = engine.run(seeds=seeds)
+    assert (np.asarray(res.mask)
+            == (bfs_oracle(g, 3) | bfs_oracle(g, 40))).all()
+
+
+def test_windowed_continuation_beyond_window():
+    """A hub whose frontier in-neighbor sits past the window exercises the
+    probe_first_live continuation of the pull kernel."""
+    n = 40
+    # hub (vertex 0) has 30 in-edges; only the last source reaches onward
+    src = list(range(1, 31)) + [31]
+    dst = [0] * 30 + [30]          # 31 -> 30 -> ... nothing; 1..30 -> 0
+    g = CSRGraph.from_edges(n, np.array(src), np.array(dst))
+    for backend in BACKEND_PARAMS:
+        engine = plan_reach(g, backend=backend, window=2)
+        res = engine.run(seeds=30)   # 30 -> 0 via the 30th in-edge of hub 0
+        assert (np.asarray(res.mask) == bfs_oracle(g, 30)).all(), backend
+
+
+def test_windowed_no_overflow_compiles_fallback_out():
+    """A ring has in-degree 1 everywhere: with window >= 1 no vertex
+    overflows, the engine's static overflow fact is False, and the
+    tile-only body (no whole-row fallback) must still be exact — single
+    and batched, through the Pallas interpret kernel too."""
+    n = 17
+    g = CSRGraph.from_edges(n, np.arange(n), (np.arange(n) + 1) % n)
+    for use_kernel in (None, True):
+        engine = plan_reach(g, backend="windowed", window=4,
+                            use_kernel=use_kernel)
+        assert engine._has_overflow() is False
+        res = engine.run(seeds=5)
+        assert (np.asarray(res.mask) == bfs_oracle(g, 5)).all()
+        seeds = np.zeros((2, n), bool)
+        seeds[0, 5] = seeds[1, 11] = True
+        batch = engine.run_batch(seeds)
+        assert (np.asarray(batch.mask[0]) == bfs_oracle(g, 5)).all()
+        assert (np.asarray(batch.mask[1]) == bfs_oracle(g, 11)).all()
+
+
+# -- compile-once contract ----------------------------------------------------
+
+def test_reach_compile_cache_and_transpose_seed():
+    # unique shape (n=107, m=321) so no other test warms this cache entry
+    g = random_graph(21, n=107)
+    engine = plan_reach(g, backend="dense")
+    rng = np.random.default_rng(21)
+    for _ in range(5):
+        engine.run(seeds=int(rng.integers(0, g.n)))
+    assert engine.traces == 1 and engine.dispatches == 5
+    assert engine.transpose_builds == 0     # push never touches Gᵀ
+
+    # pull needs Gᵀ: built once, or zero times when pre-seeded
+    pull = plan_reach(g, backend="windowed")
+    pull.run(seeds=0)
+    pull.run(seeds=1)
+    assert pull.transpose_builds == 1
+    seeded = plan_reach(g, backend="windowed", transpose=pull.transpose)
+    seeded.run(seeds=0)
+    assert seeded.transpose_builds == 0
+
+
+@pytest.mark.parametrize("backend", BACKEND_PARAMS)
+def test_run_batch_matches_sequential(backend):
+    g = random_graph(22, n=61)
+    rng = np.random.default_rng(22)
+    B = 4
+    seeds = np.zeros((B, g.n), bool)
+    seeds[np.arange(B), rng.integers(0, g.n, B)] = True
+    actives = np.stack([rng.random(g.n) < p for p in (0.9, 0.6, 0.3, 1.0)])
+    engine = plan_reach(g, backend=backend, window=4)
+    batch = engine.run_batch(seeds, actives)
+    assert batch.mask.shape == (B, g.n)
+    dispatches = engine.dispatches
+    for b in range(B):
+        single = engine.run(seeds=seeds[b], active=actives[b])
+        assert (np.asarray(batch.mask[b])
+                == np.asarray(single.mask)).all(), b
+        assert int(batch.rounds[b]) == single.rounds
+    assert engine.dispatches == dispatches + B   # batch itself was 1
+
+
+# -- degenerate paths ---------------------------------------------------------
+
+def test_degenerate_reach_device_resident():
+    import jax
+    for n in (0, 6):
+        g = CSRGraph.from_edges(n, [], [])
+        engine = plan_reach(g)
+        seeds = np.zeros(n, bool)
+        if n:
+            seeds[2] = True
+        res = engine.run(seeds=seeds)
+        # no edges: reachability is the seed set itself, still on device
+        assert isinstance(res.mask, jax.Array)
+        assert (np.asarray(res.mask) == seeds).all()
+        assert res.rounds == 0 and engine.dispatches == 0
+        batch = engine.run_batch(np.stack([seeds, np.zeros(n, bool)]))
+        assert batch.mask.shape == (2, n)
+        # batched results report one count per query
+        assert (batch.n_reached == [int(seeds.sum()), 0]).all()
+
+
+def test_seed_validation():
+    g = random_graph(23, n=12)
+    engine = plan_reach(g)
+    with pytest.raises(ValueError, match="out of range"):
+        engine.run(seeds=99)
+    # bool is an int subclass: must be rejected, not read as vertex 0/1
+    with pytest.raises(ValueError, match="scalar bool"):
+        engine.run(seeds=True)
+    with pytest.raises(ValueError, match="seeds must be"):
+        engine.run(seeds=np.ones(5, bool))
+    with pytest.raises(ValueError, match="active mask"):
+        engine.run(seeds=0, active=np.ones(5, bool))
+    with pytest.raises(ValueError, match="seed_masks"):
+        engine.run_batch(np.ones(g.n, bool))

@@ -1,34 +1,84 @@
-"""FW-BW SCC decomposition with trimming (the paper's application, §1.1)
-against an iterative Tarjan oracle."""
+"""Batched FW-BW SCC decomposition with trimming (the paper's application,
+§1.1) against an iterative Tarjan oracle, plus the driver's dispatch
+contract: per worklist generation, exactly one batched trim dispatch and
+two batched reach dispatches (DESIGN.md §8)."""
 import numpy as np
 import pytest
-
-pytest.importorskip(
-    "hypothesis",
-    reason="property-based suite needs the optional hypothesis dep "
-           "(pip install -e .[test]); deterministic SCC coverage "
-           "lives in test_engine.py")
-from hypothesis import given, settings, strategies as st
 
 from repro.core import CSRGraph
 from repro.core.scc import same_partition, scc_decompose, tarjan_oracle
 
 
-@settings(max_examples=15, deadline=None)
-@given(st.integers(2, 50), st.integers(0, 150), st.integers(0, 2**31 - 1),
-       st.booleans())
-def test_scc_matches_tarjan(n, m, seed, use_trim):
-    rng = np.random.default_rng(seed)
-    g = CSRGraph.from_edges(n, rng.integers(0, n, m),
-                            rng.integers(0, n, m))
-    labels, stats = scc_decompose(g, use_trim=use_trim)
-    oracle = tarjan_oracle(*g.to_numpy())
-    assert same_partition(labels, oracle)
+def four_cycle_star():
+    """Four disjoint cycles joined by one-way bridges in a star (center
+    → A, center → B, C → center): 4 SCCs whose worklist branches, so one
+    generation carries several regions at once."""
+    blocks, srcs, dsts = [], [], []
+    offset = 0
+    for size in (11, 7, 5, 13):
+        v = np.arange(size) + offset
+        srcs.append(v)
+        dsts.append(np.roll(v, -1))
+        blocks.append(v)
+        offset += size
+    for a, b in ((0, 1), (0, 2), (3, 0)):
+        srcs.append(blocks[a][:1])
+        dsts.append(blocks[b][:1])
+    return CSRGraph.from_edges(offset, np.concatenate(srcs),
+                               np.concatenate(dsts))
 
 
-def test_trimming_reduces_pivots():
+# -- dispatch contract (deterministic; no hypothesis needed) ------------------
+
+def test_one_generation_one_trim_two_reach_dispatches():
+    """A single cycle survives trimming, is captured by one pivot, and
+    leaves no children: exactly one generation — one batched trim
+    dispatch, two batched reach dispatches (FW + BW)."""
+    n = 9
+    src = np.arange(n)
+    dst = (src + 1) % n
+    g = CSRGraph.from_edges(n, src, dst)
+    labels, stats = scc_decompose(g)
+    assert same_partition(labels, tarjan_oracle(*g.to_numpy()))
+    assert stats["generations"] == 1
+    assert stats["trim_dispatches"] == 1
+    assert stats["reach_dispatches"] == 2
+    assert stats["pivots"] == 1
+
+
+def test_dispatches_scale_with_generations_not_regions():
+    """The star's first pivot splits the worklist into a FW-only and a
+    BW-only region, so the next generation carries several regions at
+    once — yet each generation still costs one trim and two reach
+    dispatches; the batch width absorbs the regions and multiple pivots
+    advance per dispatch."""
+    g = four_cycle_star()
+    labels, stats = scc_decompose(g)
+    assert same_partition(labels, tarjan_oracle(*g.to_numpy()))
+    assert len(np.unique(labels)) == 4
+    # the per-generation contract holds for every generation that ran
+    assert stats["trim_dispatches"] == stats["generations"]
+    assert stats["reach_dispatches"] == 2 * stats["generations"]
+    # batching: 4 pivots were needed but a generation drained several
+    # regions at once, so strictly fewer generations than pivots
+    assert stats["pivots"] == 4
+    assert stats["generations"] < stats["pivots"]
+
+
+def test_no_reach_dispatch_when_trim_clears_everything():
+    # chain = DAG: generation 1 trims every vertex, no pivot ever runs
+    n = 50
+    g = CSRGraph.from_edges(n, np.arange(n - 1), np.arange(1, n))
+    labels, stats = scc_decompose(g)
+    assert stats["trimmed_total"] == n
+    assert stats["reach_dispatches"] == 0 and stats["pivots"] == 0
+    assert stats["trim_dispatches"] == stats["generations"] == 1
+    assert len(np.unique(labels)) == n
+
+
+def test_trimming_reduces_generations():
     """On a mostly-acyclic graph, trimming should peel nearly everything
-    before any BFS pivot runs (the paper's motivation)."""
+    before any reach pivot runs (the paper's motivation)."""
     rng = np.random.default_rng(0)
     n = 300
     # DAG + one small cycle
@@ -42,3 +92,34 @@ def test_trimming_reduces_pivots():
     assert same_partition(labels_t, labels_n)
     assert stats_t["pivots"] < stats_n["pivots"]
     assert stats_t["trimmed_total"] > 0
+
+
+def test_max_batch_chunks_wide_worklists():
+    """With max_batch below the worklist width, a generation drains in
+    several equal chunks: the partition is unchanged and the dispatch
+    count scales with chunks instead of staying at one-trim-two-reach."""
+    g = four_cycle_star()
+    wide, stats_wide = scc_decompose(g)                  # fits one chunk
+    narrow, stats_narrow = scc_decompose(g, max_batch=1, counters=True)
+    assert same_partition(wide, narrow)
+    assert same_partition(narrow, tarjan_oracle(*g.to_numpy()))
+    assert stats_narrow["pivots"] == stats_wide["pivots"] == 4
+    # chunking trades dispatches for bounded width, never correctness
+    assert stats_narrow["trim_dispatches"] > stats_wide["trim_dispatches"]
+    assert stats_narrow["reach_dispatches"] > stats_wide["reach_dispatches"]
+    with pytest.raises(ValueError, match="power of two"):
+        scc_decompose(g, max_batch=3)
+
+
+def test_sharded_trim_backend_rejected_fail_fast():
+    g = CSRGraph.from_edges(3, [0, 1, 2], [1, 2, 0])
+    with pytest.raises(ValueError, match="batchable trim backend"):
+        scc_decompose(g, trim_backend="sharded")
+
+
+def test_counters_opt_in():
+    g = CSRGraph.from_edges(4, [0, 1, 2, 3], [1, 2, 3, 0])
+    _, fast = scc_decompose(g)
+    assert fast["trim_edges_traversed"] is None
+    _, full = scc_decompose(g, counters=True)
+    assert full["trim_edges_traversed"] >= g.m  # cycle: every edge probed
