@@ -1,0 +1,145 @@
+"""Streaming benchmark: incremental retrim vs from-scratch trim under
+small-delta edge-update workloads (DESIGN.md §9), on the six graph
+families at benchmark scale.
+
+    PYTHONPATH=src python benchmarks/bench_stream.py          # BENCH_stream.json
+    PYTHONPATH=src python benchmarks/bench_stream.py --smoke  # CI smoke sizes
+
+Workload: per family, ``--batches`` deletion batches of ≤1% of m each
+(random live edges, sampled without replacement).  ER is generated with
+``simple=True`` so a deletion batch can never target a phantom duplicate
+arc.  Two timings per batch, both on the same device-resident overlay
+(identical static shapes, so neither side pays retraces):
+
+  incr_retrim_ms    — ``StreamEngine.apply``: host edge resolution +
+                      one dispatch (counter-scatter + delta-seeded
+                      fixpoint).  This is the streaming serving path.
+  scratch_retrim_ms — ``StreamEngine.retrim(full=True)``: the fixpoint
+                      rebuilt from scratch over the same overlay (all
+                      vertices live, counters re-initialized) — what a
+                      non-incremental system pays per update batch,
+                      with the CSR rebuild *excluded* (charitable to
+                      the baseline).
+
+``updates_per_sec`` is the sustained apply throughput.  Correctness is
+cross-checked before timing: the incremental fixpoint must be
+bit-identical to a fresh ``TrimEngine.run`` on the materialized graph.
+Output is one JSON document so the perf trajectory is machine-readable
+across PRs.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core import plan
+from repro.core.stream import plan_stream
+from repro.graphs import generators
+
+SIZES = {
+    "ER": dict(n=50_000, m=400_000, seed=1, simple=True),
+    "BA": dict(n=20_000, deg=8, seed=1),
+    "RMAT": dict(n_log2=14, m=131_072, seed=1),
+    "chain": dict(n=5_000),
+    "layered": dict(n=50_000, layers=37, deg=4, seed=1),
+    "sink_heavy": dict(n=50_000, m=200_000, sink_frac=0.9, seed=1),
+}
+SMOKE_SIZES = {
+    "ER": dict(n=2_000, m=16_000, seed=1, simple=True),
+    "BA": dict(n=2_000, deg=8, seed=1),
+    "RMAT": dict(n_log2=10, m=8_192, seed=1),
+    "chain": dict(n=500),
+    "layered": dict(n=2_000, layers=21, deg=4, seed=1),
+    "sink_heavy": dict(n=2_000, m=8_000, sink_frac=0.9, seed=1),
+}
+
+
+def bench_family(name, kwargs, batches, seed=0):
+    factory, _ = generators.BENCHMARK_GRAPHS[name]
+    g = factory(**kwargs)
+    print(f"# {name}: n={g.n:,} m={g.m:,}", file=sys.stderr)
+    engine = plan_stream(g)
+    rng = np.random.default_rng(seed)
+    src, dst = engine.delta._src_np.copy(), engine.delta._dst_np.copy()
+    k = max(1, g.m // 100)                 # ≤1% of m per batch
+    alive = np.ones(g.m, bool)
+
+    def next_batch():
+        ids = rng.choice(np.nonzero(alive)[0], k, replace=False)
+        alive[ids] = False
+        return src[ids], dst[ids]
+
+    # warm both jitted variants AND cross-check correctness: after a real
+    # batch, the incremental fixpoint must be bit-identical to a fresh
+    # TrimEngine.run on the materialized graph
+    engine.apply(deletions=next_batch())
+    got = np.asarray(engine.retrim().status)
+    want = np.asarray(plan(engine.snapshot(), method="ac4").run().status)
+    assert np.array_equal(got, want), f"{name}: retrim != from-scratch"
+    engine.retrim(full=True)
+    engine.apply(deletions=next_batch())   # settle allocator/caches
+    engine.retrim(full=True)
+
+    t_incr, t_full, rounds = [], [], []
+    for _ in range(batches):
+        batch = next_batch()
+        t0 = time.perf_counter()
+        res = engine.apply(deletions=batch)
+        rounds.append(res.rounds)           # host sync closes the timing
+        t_incr.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        _ = engine.retrim(full=True).rounds
+        t_full.append(time.perf_counter() - t0)
+
+    incr_ms = float(np.median(t_incr)) * 1e3
+    full_ms = float(np.median(t_full)) * 1e3
+    row = {
+        "n": g.n, "m": g.m, "batch_edges": k, "batches": batches,
+        "incr_retrim_ms": round(incr_ms, 3),
+        "scratch_retrim_ms": round(full_ms, 3),
+        "speedup_scratch_over_incr": round(incr_ms and full_ms / incr_ms, 2),
+        "updates_per_sec": round(k / (incr_ms / 1e3), 1),
+        "median_incr_rounds": int(np.median(rounds)),
+        "trimmed": int(engine.retrim().n_trimmed),
+    }
+    print(f"#   incr {row['incr_retrim_ms']:.2f}ms | scratch "
+          f"{row['scratch_retrim_ms']:.2f}ms "
+          f"({row['speedup_scratch_over_incr']}x) | "
+          f"{row['updates_per_sec']:,.0f} updates/s", file=sys.stderr)
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny graphs, 3 batches (CI)")
+    ap.add_argument("--batches", type=int, default=5)
+    ap.add_argument("--out", default="BENCH_stream.json")
+    ap.add_argument("--families", nargs="*", default=None)
+    args = ap.parse_args()
+    sizes = SMOKE_SIZES if args.smoke else SIZES
+    batches = 3 if args.smoke else args.batches
+    families = args.families or list(sizes)
+
+    doc = {"bench": "stream", "smoke": args.smoke, "batches": batches,
+           "families": {}}
+    for name in families:
+        doc["families"][name] = bench_family(name, sizes[name], batches)
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    print(json.dumps(doc, indent=2))
+    wins = all(r["speedup_scratch_over_incr"] > 1.0
+               for r in doc["families"].values())
+    print(f"# incremental retrim beats from-scratch on every family: {wins}",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -3,24 +3,27 @@ contribution), plus its flagship application (SCC decomposition).
 
 The primary API is the compile-once engine families::
 
-    from repro.core import plan, plan_reach
+    from repro.core import plan, plan_reach, plan_stream
     engine = plan(graph, method="ac6", backend="dense", workers=16)
     result = engine.run(active=mask)
     reach  = plan_reach(graph).run(seeds=pivot, active=mask)
+    stream = plan_stream(graph).apply(deletions=(du, dv))
 
 ``trim()`` remains as a one-shot convenience shim.
 """
 from .engine import BACKENDS, TrimEngine, plan
-from .graph import CSRGraph, TrimResult, worker_of
+from .graph import CSRGraph, DeltaCSR, TrimResult, worker_of
 from .reach import REACH_BACKENDS, ReachEngine, ReachResult, plan_reach
 from .ref import complete, peeling_alpha as peeling_alpha_oracle, sound, trim_oracle
 from .registry import KernelSpec, available_methods, get_kernel, register_kernel
+from .stream import STREAM_BACKENDS, StreamEngine, StreamResult, plan_stream
 from .trim import METHODS, peeling_alpha, trim
 
 __all__ = [
-    "CSRGraph", "TrimResult", "worker_of", "trim", "METHODS",
+    "CSRGraph", "DeltaCSR", "TrimResult", "worker_of", "trim", "METHODS",
     "plan", "TrimEngine", "BACKENDS",
     "plan_reach", "ReachEngine", "ReachResult", "REACH_BACKENDS",
+    "plan_stream", "StreamEngine", "StreamResult", "STREAM_BACKENDS",
     "KernelSpec", "register_kernel", "get_kernel", "available_methods",
     "trim_oracle", "sound", "complete", "peeling_alpha",
     "peeling_alpha_oracle",

@@ -12,6 +12,13 @@ engine layers resolve their kernels through one mechanism (DESIGN.md §3):
   (``core/reach.py``): ``"push"`` (scatter over out-edges) and ``"pull"``
   (windowed gather over in-edges through the ``frontier_expand`` Pallas
   kernel).
+* family ``"stream"`` — incremental trimming over edge-update batches
+  (``core/stream.py``): ``"ac4"`` maintains the AC-4 support counters
+  through the ``counter_scatter`` Pallas kernel and re-runs the fixpoint
+  from the delta frontier.  Its ``run`` adapter takes
+  ``(transpose_arrays, overlay, state, updates, *, use_kernel, full)``
+  and returns ``(overlay, state, rounds, dirty)`` — see
+  :func:`repro.core.stream._run_stream_ac4`.
 
 A trim spec's ``run`` adapter has one uniform signature so every method is
 interchangeable under ``jax.jit`` / ``jax.vmap``::

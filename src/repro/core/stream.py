@@ -1,0 +1,456 @@
+"""Compile-once incremental trimming over edge-update batches (DESIGN.md §9).
+
+The paper's central observation — trimming *is* arc-consistency — makes
+AC-4's support counters (paper §5) persistent state: a long-lived service
+can absorb edge deletions/insertions in O(1) amortized counter work per
+arc and re-trim in time proportional to the *delta*, not the graph.
+:class:`StreamEngine` is the third engine family (``"stream"`` in the
+kernel registry), built on the same :class:`~repro.core.enginebase.EngineBase`
+lifecycle as trim and reach::
+
+    engine = plan_stream(graph, capacity=1024)
+    res = engine.apply(deletions=(du, dv), insertions=(iu, iv))
+    result = engine.retrim()            # current fixpoint, zero dispatch
+    result = engine.retrim(full=True)   # from-scratch rebuild, 1 dispatch
+    g_now  = engine.snapshot()          # materialized CSRGraph
+
+Execution model (all static shapes, one device dispatch per ``apply``):
+
+1. The batch is resolved on the host against the :class:`~repro.core.graph.
+   DeltaCSR` overlay (tombstone ids / insert slots, multiset semantics)
+   and pow2-padded.
+2. A jitted step scatters the structural updates into the device overlay,
+   adjusts the AC-4 live-out-degree counters of the touched sources with
+   the ``kernels.counter_scatter`` Pallas kernel (one dispatch emits the
+   newly-dead frontier), and
+3. runs an *incremental* fixpoint: the AC-4 propagation body of
+   ``core/ac4.py`` — bulk counter decrements through Gᵀ — extended with
+   the overlay (tombstoned transpose edges masked out, insert-buffer arcs
+   segment-summed in) and seeded from the delta frontier instead of all
+   vertices.
+
+**Insertions and revival.**  Deleting edges is monotone: continuing from
+the previous fixpoint reaches exactly the from-scratch fixpoint.  An
+inserted arc whose source is currently dead can *revive* vertices (it may
+give a dead vertex a live successor, or close a new cycle among dead
+vertices), which counter maintenance cannot express.  The step detects
+that case on device (``dirty``) and — inside the same dispatch, via a
+``where``-select on the loop's initial state — falls back to the
+from-scratch initialization (all vertices live, counters = live
+out-degree over the overlay).  Either way ``retrim()`` is bit-identical
+to a from-scratch :meth:`~repro.core.engine.TrimEngine.run` on the
+materialized graph; insertions between live endpoints and all deletions
+stay on the cheap incremental path.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+from .enginebase import _TRACE_COUNT, EngineBase
+from .graph import CSRGraph, DeltaCSR, TrimResult, _pow2, \
+    _stable_counting_order, check_edge_ids
+from .registry import KernelSpec, get_kernel, register_kernel
+
+STREAM_BACKENDS = ("dense",)
+
+
+# -- the stream kernel (family "stream") ---------------------------------------
+
+def _run_stream_ac4(tarrs, overlay, state, updates, *, use_kernel,
+                    full: bool, revivable: bool = True):
+    """One apply step: structural overlay updates + counter maintenance +
+    (incremental or from-scratch) AC-4 fixpoint, all in one dispatch.
+
+    tarrs:   (t_indptr, t_indices, t_rows, perm) — base Gᵀ plus the
+             permutation mapping Gᵀ edge order back to base edge order
+             (``perm``), so the base tombstone mask can be gathered into
+             transpose order once per step.
+    overlay: (tomb, ins_src, ins_dst, ins_alive) — device overlay arrays.
+    state:   (status bool (n,), counters int32 (n,)) — the persistent
+             AC-4 state; ``counters[v]`` = number of live out-arcs of a
+             live vertex v (DESIGN.md §9).
+    updates: (del_src, del_dst, del_eid, del_slot, add_src, add_dst,
+             add_slot) — pow2-padded int32 batches; sentinel ids (n for
+             endpoints, m for edge ids, capacity for slots) are dropped
+             by the ``mode="drop"`` scatters / the counter kernel.
+    full:    static — ignore the incremental state and rebuild the
+             fixpoint from scratch over the overlay (plan-time init,
+             ``retrim(full=True)``, and the bit-identity oracle).
+    revivable: static — the batch contains insertions, so the revival
+             fallback must be compiled in (a ``lax.cond`` that rebuilds
+             from scratch when an inserted arc leaves a dead source).
+             Deletion-only batches are monotone and compile the fallback
+             — including its counter re-initialization — out entirely.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from ..kernels import ops as kops
+
+    t_indptr, t_indices, t_rows, perm = tarrs
+    tomb, ins_src, ins_dst, ins_alive = overlay
+    status, counters = state
+    del_src, del_dst, del_eid, del_slot, add_src, add_dst, add_slot = updates
+    n = status.shape[0]
+    hi = max(n - 1, 0)
+
+    # 1. structural updates (pow2-padding sentinels fall off the end)
+    tomb = tomb.at[del_eid].set(True, mode="drop")
+    ins_alive = ins_alive.at[del_slot].set(False, mode="drop")
+    ins_src = ins_src.at[add_slot].set(add_src, mode="drop")
+    ins_dst = ins_dst.at[add_slot].set(add_dst, mode="drop")
+    ins_alive = ins_alive.at[add_slot].set(True, mode="drop")
+    tomb_t = tomb[perm]                      # tombstones in Gᵀ edge order
+
+    def stat(ids):
+        return status[jnp.clip(ids, 0, hi)] & (ids < n)
+
+    # 2. counter deltas w.r.t. the pre-batch fixpoint: an arc contributes
+    # to its source's counter iff both endpoints are live
+    del_live = stat(del_src) & stat(del_dst)
+    add_live = stat(add_src) & stat(add_dst)
+    upd_src = jnp.concatenate([del_src, add_src])
+    upd_delta = jnp.concatenate([-del_live.astype(jnp.int32),
+                                 add_live.astype(jnp.int32)])
+    new_counters, newly = kops.counter_scatter(
+        counters, status, upd_src, upd_delta, use_kernel=use_kernel)
+
+    def scratch_init(_):
+        # from-scratch: all vertices live, counters = live out-degree
+        # over the overlay (two segment-sums)
+        deg0 = jax.ops.segment_sum((~tomb_t).astype(jnp.int32), t_indices,
+                                   num_segments=n)
+        deg0 = deg0 + jax.ops.segment_sum(ins_alive.astype(jnp.int32),
+                                          jnp.clip(ins_src, 0, hi),
+                                          num_segments=n)
+        return ~(deg0 == 0), deg0, deg0 == 0
+
+    def incr_init(_):
+        return status & ~newly, new_counters, newly
+
+    if full:
+        dirty = jnp.array(False)
+        status0, counters0, frontier0 = scratch_init(None)
+    elif revivable:
+        # revival: an inserted arc out of a dead source can resurrect
+        # vertices (new support, or a new cycle among dead vertices) —
+        # restart the fixpoint from scratch inside this same dispatch
+        dirty = jnp.any((add_src < n) & ~status[jnp.clip(add_src, 0, hi)])
+        status0, counters0, frontier0 = jax.lax.cond(
+            dirty, scratch_init, incr_init, None)
+    else:
+        # deletion-only batches are monotone: no revival, and the
+        # from-scratch re-initialization is compiled out entirely
+        dirty = jnp.array(False)
+        status0, counters0, frontier0 = incr_init(None)
+
+    # 3. AC-4 propagation (core/ac4.py's body over the overlay): each Gᵀ
+    # arc whose dead propagator is on the frontier decrements its
+    # predecessor — base arcs masked by tombstones, insert-buffer arcs
+    # segment-summed in
+    ins_tgt = jnp.clip(ins_dst, 0, hi)
+    ins_own = jnp.clip(ins_src, 0, hi)
+
+    def cond(s):
+        return jnp.any(s["frontier"])
+
+    def body(s):
+        f = s["frontier"]
+        dec = jax.ops.segment_sum((f[t_rows] & ~tomb_t).astype(jnp.int32),
+                                  t_indices, num_segments=n)
+        dec = dec + jax.ops.segment_sum(
+            (f[ins_tgt] & ins_alive).astype(jnp.int32), ins_own,
+            num_segments=n)
+        c = s["counters"] - dec
+        newly_ = s["status"] & (c <= 0)
+        return dict(status=s["status"] & ~newly_, counters=c,
+                    frontier=newly_, rounds=s["rounds"] + 1)
+
+    out = jax.lax.while_loop(cond, body, dict(
+        status=status0, counters=counters0, frontier=frontier0,
+        rounds=jnp.array(0, jnp.int32)))
+    return ((tomb, ins_src, ins_dst, ins_alive),
+            (out["status"], out["counters"]), out["rounds"], dirty)
+
+
+register_kernel(KernelSpec(name="ac4", run=_run_stream_ac4,
+                           needs_transpose=True), family="stream")
+
+
+@functools.lru_cache(maxsize=None)
+def _stream_runner(method: str, use_kernel, full: bool, revivable: bool):
+    """Jitted apply step, cached process-wide on the static configuration
+    (per method: from-scratch, deletion-only, and with-insertions
+    variants)."""
+    import jax
+
+    spec = get_kernel(method, family="stream")
+
+    def call(tarrs, overlay, state, updates):
+        _TRACE_COUNT[0] += 1  # runs at trace time only
+        return spec.run(tarrs, overlay, state, updates,
+                        use_kernel=use_kernel, full=full,
+                        revivable=revivable)
+
+    return jax.jit(call)
+
+
+# -- results -------------------------------------------------------------------
+
+class StreamResult:
+    """Outcome of one ``apply`` batch — device-resident, lazily
+    materialized (the ``TrimResult`` conventions).
+
+    status:  (n,) bool fixpoint liveness after the batch
+    rounds:  incremental propagation rounds this batch ran
+    dirty:   the batch contained a reviving insertion and fell back to the
+             from-scratch initialization (still one dispatch)
+    """
+
+    __slots__ = ("_status", "_rounds", "_dirty")
+
+    def __init__(self, status, rounds, dirty):
+        self._status = status
+        self._rounds = rounds
+        self._dirty = dirty
+
+    @property
+    def status(self):
+        return self._status
+
+    @property
+    def rounds(self) -> int:
+        if self._rounds is not None and not isinstance(self._rounds, int):
+            self._rounds = int(self._rounds)
+        return self._rounds
+
+    @property
+    def dirty(self) -> bool:
+        if not isinstance(self._dirty, bool):
+            self._dirty = bool(self._dirty)
+        return self._dirty
+
+    @property
+    def n_trimmed(self) -> int:
+        return int((~np.asarray(self._status)).sum())
+
+    def __repr__(self):  # no device sync: report only static facts
+        return f"StreamResult(n={self._status.shape[0]})"
+
+
+# -- the engine ----------------------------------------------------------------
+
+def plan_stream(graph, method: str = "ac4", backend: str = "dense", *,
+                capacity: int | None = None,
+                load_factor: float | None = None,
+                use_kernel: bool | None = None) -> "StreamEngine":
+    """Build a :class:`StreamEngine` over ``graph`` (a :class:`CSRGraph`
+    or a pre-built :class:`DeltaCSR` overlay).
+
+    ``capacity`` (default 256) sizes the insert buffer (rounded up to a
+    power of two; the engine compacts or doubles it when a batch would
+    overflow).  ``load_factor`` (default 0.5) is the overlay fraction —
+    (tombstones + consumed insert slots) / base edges — beyond which
+    ``apply`` folds the overlay into a fresh base CSR via
+    :meth:`DeltaCSR.compact`.  A pre-built :class:`DeltaCSR` carries its
+    own sizing, so passing either kwarg with one raises rather than
+    silently ignoring it.
+    """
+    return StreamEngine(graph, method=method, backend=backend,
+                        capacity=capacity, load_factor=load_factor,
+                        use_kernel=use_kernel)
+
+
+class StreamEngine(EngineBase):
+    """Compile-once incremental trimming over one mutating graph.  Build
+    with :func:`plan_stream`."""
+
+    def __init__(self, graph, *, method, backend, capacity, load_factor,
+                 use_kernel):
+        self.spec = get_kernel(method, family="stream")
+        if backend not in STREAM_BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}; expected one "
+                             f"of {STREAM_BACKENDS}")
+        if isinstance(graph, DeltaCSR):
+            if capacity is not None or load_factor is not None:
+                raise ValueError(
+                    "capacity/load_factor are fixed by the DeltaCSR you "
+                    "passed; construct it with the sizing you want")
+            delta = graph
+        else:
+            delta = DeltaCSR(graph,
+                             capacity=256 if capacity is None else capacity,
+                             load_factor=(0.5 if load_factor is None
+                                          else load_factor))
+        super().__init__(delta.base)
+        self.delta = delta
+        self.method = method
+        self.backend = backend
+        self.use_kernel = use_kernel
+        self._tarrs = None
+        self._state = None          # (status bool (n,), counters int32 (n,))
+        self._rounds_total = None   # device scalar, accumulated lazily
+        self._compactions = 0
+        if delta.n:
+            self.retrim(full=True)  # establish the fixpoint at plan time
+        else:
+            import jax.numpy as jnp
+            self._state = (jnp.zeros((0,), bool), jnp.zeros((0,), jnp.int32))
+            self._rounds_total = jnp.array(0, jnp.int32)
+
+    # -- cached resources --------------------------------------------------
+    def _transpose_arrays(self):
+        """Base Gᵀ arrays plus the base-edge→transpose-edge permutation
+        (int32), rebuilt only at compaction."""
+        if self._tarrs is None:
+            import jax.numpy as jnp
+            base = self.delta.base
+            n, m = base.n, base.m
+            indices = self.delta._dst_np
+            src = self.delta._src_np      # edge sources, held by the overlay
+            perm = _stable_counting_order(indices, n)
+            t_counts = (np.bincount(indices, minlength=n) if m
+                        else np.zeros(n, np.int64))
+            t_indptr = np.zeros(n + 1, dtype=np.int32)
+            np.cumsum(t_counts, out=t_indptr[1:])
+            t_indices = src[perm]
+            t_rows = np.repeat(np.arange(n, dtype=np.int64), t_counts)
+            self._tarrs = tuple(
+                jnp.asarray(a, jnp.int32)
+                for a in (t_indptr, t_indices, t_rows, perm))
+            # seed the EngineBase cache so .transpose is consistent
+            if self._transpose is None:
+                self._transpose = CSRGraph(self._tarrs[0], self._tarrs[1])
+                self._transpose_builds += 1
+        return self._tarrs
+
+    def _overlay_arrays(self):
+        d = self.delta
+        return (d.tomb, d.ins_src, d.ins_dst, d.ins_alive)
+
+    # -- host-side batch plumbing ------------------------------------------
+    @staticmethod
+    def _pairs(edges):
+        if edges is None:
+            return (np.zeros(0, np.int64),) * 2
+        src, dst = edges
+        return (np.asarray(src, np.int64).reshape(-1),
+                np.asarray(dst, np.int64).reshape(-1))
+
+    def _padded_updates(self, dsrc, ddst, eids, slots_del, isrc, idst,
+                        slots_ins):
+        import jax.numpy as jnp
+        n, m, cap = self.delta.n, self.delta.m_base, self.delta.capacity
+        bd, bi = _pow2(max(dsrc.size, 1)), _pow2(max(isrc.size, 1))
+
+        def pad(a, width, fill):
+            out = np.full(width, fill, np.int64)
+            out[:a.size] = a
+            return jnp.asarray(out, jnp.int32)
+
+        return (pad(dsrc, bd, n), pad(ddst, bd, n), pad(eids, bd, m),
+                pad(slots_del, bd, cap), pad(isrc, bi, n),
+                pad(idst, bi, n), pad(slots_ins, bi, cap))
+
+    def _write_back(self, overlay, state, rounds):
+        d = self.delta
+        d.tomb, d.ins_src, d.ins_dst, d.ins_alive = overlay
+        self._state = state
+        self._rounds_total = (rounds if self._rounds_total is None
+                              else self._rounds_total + rounds)
+
+    # -- execution ---------------------------------------------------------
+    def apply(self, deletions=None, insertions=None) -> StreamResult:
+        """Apply one edge-update batch and advance the fixpoint.
+
+        ``deletions`` / ``insertions``: ``(src, dst)`` array pairs.
+        Deleting an edge that is not present raises ``ValueError`` (and
+        leaves the batch unapplied).  One device dispatch; the update
+        arrays are pow2-padded so repeated batch sizes never retrace.
+        """
+        dsrc, ddst = self._pairs(deletions)
+        isrc, idst = self._pairs(insertions)
+        d = self.delta
+        if d.n == 0:
+            if dsrc.size or isrc.size:
+                raise ValueError("cannot update an empty (n=0) graph")
+            return StreamResult(self._state[0], 0, False)
+        # validate the whole batch before anything commits: a bad
+        # insertion must not leave the deletions half-applied
+        isrc, idst = check_edge_ids(d.n, isrc, idst)
+        if d.n_ins + isrc.size > d.capacity:
+            self.compact()          # free the insert buffer first
+            if isrc.size > d.capacity:
+                d.grow(isrc.size)
+        eids, slots_del = d.resolve_deletions(dsrc, ddst)
+        slots_ins = d.stage_inserts(isrc, idst)
+        fn = _stream_runner(self.method, self.use_kernel, full=False,
+                            revivable=bool(isrc.size))
+        overlay, state, rounds, dirty = self._dispatch(
+            fn, self._transpose_arrays(), self._overlay_arrays(),
+            self._state,
+            self._padded_updates(dsrc, ddst, eids, slots_del, isrc, idst,
+                                 slots_ins))
+        self._write_back(overlay, state, rounds)
+        res = StreamResult(state[0], rounds, dirty)
+        if d.needs_compact:
+            self.compact()
+        return res
+
+    def retrim(self, full: bool = False) -> TrimResult:
+        """The current trimming fixpoint as a :class:`TrimResult`,
+        bit-identical to a from-scratch ``TrimEngine.run()`` on
+        :meth:`snapshot` (the acceptance oracle).
+
+        ``full=False`` (default) returns the incrementally-maintained
+        fixpoint — zero dispatches.  ``full=True`` discards the state and
+        rebuilds it from scratch over the overlay in one dispatch (the
+        measured "from-scratch" baseline in ``benchmarks/bench_stream.py``).
+        """
+        import jax.numpy as jnp
+        if full and self.delta.n:
+            fn = _stream_runner(self.method, self.use_kernel, full=True,
+                                revivable=False)
+            z = np.zeros(0, np.int64)
+            state_in = (self._state if self._state is not None else (
+                jnp.zeros((self.delta.n,), bool),
+                jnp.zeros((self.delta.n,), jnp.int32)))
+            overlay, state, rounds, _ = self._dispatch(
+                fn, self._transpose_arrays(), self._overlay_arrays(),
+                state_in, self._padded_updates(z, z, z, z, z, z, z))
+            self.delta.tomb, self.delta.ins_src, self.delta.ins_dst, \
+                self.delta.ins_alive = overlay
+            self._state = state
+            self._rounds_total = rounds
+        status, _ = self._state
+        return TrimResult(status=status.astype(jnp.int32),
+                          rounds=self._rounds_total)
+
+    def snapshot(self) -> CSRGraph:
+        """Materialize the current graph (base minus tombstones plus live
+        inserts) as a standalone :class:`CSRGraph`; the overlay is kept."""
+        return self.delta.materialize()
+
+    def compact(self):
+        """Fold the overlay into a fresh base CSR (O(n+m) counting sort)
+        and rebuild the transpose/permutation caches.  The fixpoint state
+        is untouched — compaction changes the representation, not the
+        graph."""
+        self.graph = self.delta.compact()
+        self._transpose = None
+        self._tarrs = None
+        self._compactions += 1
+
+    @property
+    def compactions(self) -> int:
+        return self._compactions
+
+    @property
+    def status(self):
+        """The persistent (n,) bool liveness fixpoint, device-resident."""
+        return self._state[0]
+
+
+__all__ = ["plan_stream", "StreamEngine", "StreamResult", "STREAM_BACKENDS"]

@@ -17,10 +17,23 @@ import numpy as np
 from ..core.graph import CSRGraph
 
 
-def erdos_renyi(n: int, m: int, seed: int = 0) -> CSRGraph:
+def erdos_renyi(n: int, m: int, seed: int = 0,
+                simple: bool = False) -> CSRGraph:
+    """``simple=True`` strips self-loops and duplicate arcs (so the graph
+    is a simple digraph, possibly with fewer than ``m`` edges).  Off by
+    default to preserve the historical benchmark baselines; the stream
+    benchmark turns it on so deletion batches can never target phantom
+    duplicate instances."""
     rng = np.random.default_rng(seed)
     src = rng.integers(0, n, m)
     dst = rng.integers(0, n, m)
+    if simple:
+        keep = src != dst
+        src, dst = src[keep], dst[keep]
+        # first occurrence of each (u, v) key, original order preserved
+        _, first = np.unique(src * np.int64(n) + dst, return_index=True)
+        first.sort()
+        src, dst = src[first], dst[first]
     return CSRGraph.from_edges(n, src, dst)
 
 

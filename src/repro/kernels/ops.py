@@ -10,6 +10,7 @@ from __future__ import annotations
 import jax
 
 from . import ref
+from .counter_scatter import counter_scatter_pallas as _csc
 from .first_live_scan import first_live_scan as _fls
 from .frontier_expand import frontier_expand as _fex
 from .flash_attention import flash_attention as _fa
@@ -67,3 +68,13 @@ def frontier_expand(flags, valid, pending, use_kernel: bool | None = None,
     if use_kernel:
         return _fex(flags, valid, pending, interpret=not on_tpu(), **kw)
     return ref.frontier_expand_ref(flags, valid, pending)
+
+
+def counter_scatter(counters, status, upd_src, upd_delta,
+                    use_kernel: bool | None = None, **kw):
+    if use_kernel is None:
+        use_kernel = on_tpu()
+    if use_kernel:
+        return _csc(counters, status, upd_src, upd_delta,
+                    interpret=not on_tpu(), **kw)
+    return ref.counter_scatter_ref(counters, status, upd_src, upd_delta)

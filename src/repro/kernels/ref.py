@@ -91,6 +91,22 @@ def segment_sum_ref(values, seg_ids, num_segments: int):
     return jax.ops.segment_sum(vals, ids, num_segments=num_segments)
 
 
+def counter_scatter_ref(counters, status, upd_src, upd_delta):
+    """Segment-sum twin of ``kernels.counter_scatter``: scatter-add the
+    update deltas into the support counters and report newly-dead
+    vertices.  Out-of-range sources (the pow2-padding sentinel) are
+    dropped, matching the kernel."""
+    n = counters.shape[0]
+    if n == 0:
+        return counters, jnp.zeros((0,), jnp.bool_)
+    ok = (upd_src >= 0) & (upd_src < n)
+    ids = jnp.where(ok, upd_src, 0)
+    delta = jnp.where(ok, upd_delta, 0)
+    new = counters + jax.ops.segment_sum(delta.astype(counters.dtype), ids,
+                                         num_segments=n)
+    return new, status & (new <= 0)
+
+
 def frontier_expand_ref(flags, valid, pending):
     """Row-wise masked OR — the jnp twin of ``kernels.frontier_expand``."""
     return pending & jnp.any(flags & valid, axis=1)

@@ -1,7 +1,9 @@
-"""Serving launcher: batched prefill+decode for LM archs (smoke scale) and
-batched scoring for wide-deep.
+"""Serving launcher: batched prefill+decode for LM archs (smoke scale),
+batched scoring for wide-deep, and long-lived incremental graph trimming
+over a synthetic edge-update feed (the graph system this repo is about).
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke
+    PYTHONPATH=src python -m repro.launch.serve --app trim-stream --graph ER
 """
 from __future__ import annotations
 
@@ -74,13 +76,81 @@ def serve_recsys(batch: int = 64, seed: int = 0):
     return np.asarray(scores)
 
 
+# serving-scale graph families: small enough for a 1-core container to
+# sustain a live update feed, structurally faithful to paper Table 6
+_STREAM_GRAPHS = {
+    "ER": ("erdos_renyi", dict(n=20_000, m=120_000, seed=1, simple=True)),
+    "BA": ("barabasi_albert", dict(n=10_000, deg=8, seed=1)),
+    "RMAT": ("rmat", dict(n_log2=13, m=65_536, seed=1)),
+    "chain": ("chain", dict(n=2_000)),
+    "layered": ("layered_dag", dict(n=20_000, layers=21, deg=4, seed=1)),
+    "sink_heavy": ("sink_heavy", dict(n=20_000, m=80_000, sink_frac=0.9,
+                                      seed=1)),
+}
+
+
+def serve_trim_stream(graph: str = "ER", ticks: int = 20, batch: int = 256,
+                      seed: int = 0):
+    """Drive a :class:`~repro.core.stream.StreamEngine` with a synthetic
+    update feed: each tick deletes a batch of random live edges and
+    re-inserts a previously deleted batch (re-insertions may hit the
+    revival path and trigger the from-scratch fallback — reported as
+    ``dirty``).  The serving metric is sustained updates/sec."""
+    from ..core.stream import plan_stream
+    from ..graphs import generators
+
+    fn_name, kwargs = _STREAM_GRAPHS[graph]
+    g = getattr(generators, fn_name)(**kwargs)
+    # headroom for many insert batches between compactions: every compact
+    # changes the base CSR shape and costs one retrace of the apply step
+    engine = plan_stream(g, capacity=max(4096, 16 * batch))
+    rng = np.random.default_rng(seed)
+    src, dst = engine.delta._src_np.copy(), engine.delta._dst_np.copy()
+    alive = np.ones(g.m, bool)
+    pending = []                     # deleted batches awaiting re-insertion
+    n_updates = dirty_ticks = 0
+    t0 = time.perf_counter()
+    for tick in range(ticks):
+        k = min(batch, int(alive.sum()))
+        ids = rng.choice(np.nonzero(alive)[0], k, replace=False)
+        alive[ids] = False
+        ins = pending.pop(0) if len(pending) >= 3 else None
+        res = engine.apply(
+            deletions=(src[ids], dst[ids]),
+            insertions=None if ins is None else (src[ins], dst[ins]))
+        if ins is not None:
+            alive[ins] = True
+        pending.append(ids)
+        n_updates += k + (0 if ins is None else len(ins))
+        dirty_ticks += bool(res.dirty)
+    dt = time.perf_counter() - t0
+    res = engine.retrim()
+    print(f"[serve] trim-stream {graph} n={g.n} m={g.m}: {ticks} ticks, "
+          f"{n_updates} updates in {dt*1e3:.0f} ms "
+          f"({n_updates/dt:,.0f} updates/s), dirty ticks {dirty_ticks}, "
+          f"trimmed {res.n_trimmed} ({res.trimmed_fraction*100:.1f}%), "
+          f"compactions {engine.compactions}")
+    return engine
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--app", default="model",
+                    choices=("model", "trim-stream"))
+    ap.add_argument("--arch")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--gen-len", type=int, default=16)
+    ap.add_argument("--graph", default="ER", choices=sorted(_STREAM_GRAPHS))
+    ap.add_argument("--ticks", type=int, default=20)
+    ap.add_argument("--update-batch", type=int, default=256)
     args = ap.parse_args()
+    if args.app == "trim-stream":
+        serve_trim_stream(args.graph, ticks=args.ticks,
+                          batch=args.update_batch)
+        return
+    if args.arch is None:
+        ap.error("--arch is required for --app model")
     if not args.smoke:
         raise SystemExit("full-scale serving requires TPUs; use --smoke")
     spec = configs.get(args.arch)

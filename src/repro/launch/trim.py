@@ -13,6 +13,8 @@ if "--dryrun" in __import__("sys").argv:
     PYTHONPATH=src python -m repro.launch.trim --dryrun --method ac6
     # the flagship application (batched device-resident FW-BW SCC driver):
     PYTHONPATH=src python -m repro.launch.trim --app scc --graph BA
+    # incremental trimming over edge-update batches (StreamEngine):
+    PYTHONPATH=src python -m repro.launch.trim --app stream --graph BA
 
 Serving goes through the compile-once engine: ``plan()`` once, then every
 ``run()`` reuses the cached transpose and compiled kernel — the first/steady
@@ -75,6 +77,42 @@ def run_scc(graph_name: str, method: str, backend: str = "dense",
     return labels, stats
 
 
+def run_stream(graph_name: str, batches: int = 3, batch_frac: float = 0.001,
+               seed: int = 0):
+    """Incremental trimming under a synthetic deletion feed (DESIGN.md §9):
+    ``apply()`` absorbs each batch through the counter-scatter kernel and
+    a delta-seeded fixpoint; ``retrim(full=True)`` is the from-scratch
+    baseline on the same overlay."""
+    import numpy as np
+
+    from ..core.stream import plan_stream
+    from ..graphs import make
+    g = make(graph_name)
+    engine = plan_stream(g)
+    rng = np.random.default_rng(seed)
+    src, dst = engine.delta._src_np, engine.delta._dst_np
+    k = max(1, int(g.m * batch_frac))
+    alive = np.ones(g.m, bool)
+    t_incr, t_full = [], []
+    for _ in range(batches):
+        ids = rng.choice(np.nonzero(alive)[0], k, replace=False)
+        alive[ids] = False
+        t0 = time.time()
+        res = engine.apply(deletions=(src[ids], dst[ids]))
+        _ = res.rounds                         # host sync closes the timing
+        t_incr.append(time.time() - t0)
+        t0 = time.time()
+        _ = engine.retrim(full=True).rounds
+        t_full.append(time.time() - t0)
+    inc, full = np.median(t_incr[1:] or t_incr), np.median(t_full[1:] or t_full)
+    res = engine.retrim()
+    print(f"[stream] {graph_name} n={g.n} m={g.m}: {batches} batches of "
+          f"{k} deletions | incremental {inc*1e3:.1f}ms vs from-scratch "
+          f"{full*1e3:.1f}ms ({full/max(inc, 1e-9):.1f}x) | trimmed "
+          f"{res.n_trimmed} ({res.trimmed_fraction*100:.1f}%)")
+    return engine
+
+
 def run_dryrun(method: str):
     """Lower + compile distributed trimming for the 512-chip mesh."""
     import jax
@@ -120,7 +158,8 @@ def main():
     ap.add_argument("--backend", default="dense",
                     choices=("dense", "windowed", "sharded"))
     ap.add_argument("--dryrun", action="store_true")
-    ap.add_argument("--app", default="trim", choices=("trim", "scc"))
+    ap.add_argument("--app", default="trim", choices=("trim", "scc",
+                                                      "stream"))
     ap.add_argument("--reach-backend", default="windowed",
                     choices=("dense", "windowed"))
     args = ap.parse_args()
@@ -131,6 +170,8 @@ def main():
         run_dryrun(args.method)
     elif args.app == "scc":
         run_scc(args.graph, args.method, args.backend, args.reach_backend)
+    elif args.app == "stream":
+        run_stream(args.graph)
     else:
         run_local(args.graph, args.method, args.workers, args.backend)
 

@@ -6,6 +6,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.counter_scatter import counter_scatter_pallas
 from repro.kernels.first_live_scan import first_live_scan
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.frontier_expand import frontier_expand
@@ -69,6 +70,36 @@ def test_first_live_scan(n, W, bv):
                              interpret=True)
     f2, d2 = ref.first_live_ref(flags, valid, active)
     assert (f1 == f2).all() and (d1 == d2).all()
+
+
+@pytest.mark.parametrize("n,b,bv,bu", [
+    (333, 16, 128, 8),
+    (64, 4, 64, 4),
+    (1024, 256, 256, 64),
+    (7, 3, 512, 256),      # smaller than one block
+    (50, 1, 512, 256),     # single update
+])
+def test_counter_scatter(n, b, bv, bu):
+    counters = jnp.asarray(RNG.integers(0, 5, n), jnp.int32)
+    status = jnp.asarray(RNG.random(n) < 0.7)
+    # sources include the out-of-range padding sentinel n (dropped)
+    src = jnp.asarray(RNG.integers(0, n + 1, b), jnp.int32)
+    delta = jnp.asarray(RNG.integers(-2, 3, b), jnp.int32)
+    got_c, got_d = counter_scatter_pallas(counters, status, src, delta,
+                                          block_v=bv, block_u=bu,
+                                          interpret=True)
+    want_c, want_d = ref.counter_scatter_ref(counters, status, src, delta)
+    assert got_c.dtype == want_c.dtype == jnp.int32
+    assert got_d.dtype == want_d.dtype == jnp.bool_
+    assert (got_c == want_c).all() and (got_d == want_d).all()
+    # block skipping: an all-zero delta batch keeps counters verbatim and
+    # kills nothing new beyond counters already <= 0
+    same_c, same_d = counter_scatter_pallas(counters, status, src,
+                                            jnp.zeros_like(delta),
+                                            block_v=bv, block_u=bu,
+                                            interpret=True)
+    assert (same_c == counters).all()
+    assert (same_d == (status & (counters <= 0))).all()
 
 
 @pytest.mark.parametrize("n,W,bv", [(333, 16, 128), (64, 8, 64),

@@ -1,0 +1,74 @@
+"""Property test: ``StreamEngine.retrim()`` equals a from-scratch trim
+after arbitrary insert/delete/compact sequences, on every generator
+family.
+
+Lives in its own module so the importorskip cannot take the deterministic
+stream coverage (tests/test_stream.py) down with it when the optional
+hypothesis dep is absent."""
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property-based suite needs the optional hypothesis dep "
+           "(pip install -e .[test]); deterministic stream coverage "
+           "lives in test_stream.py")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import plan_stream
+from repro.core.ref import trim_oracle
+from repro.graphs import generators
+
+# tiny instances of every generator family (fixed sizes so the jitted
+# apply step traces a bounded set of shapes across the whole run)
+FAMILIES = {
+    "er": lambda seed: generators.erdos_renyi(16, 48, seed=seed,
+                                              simple=True),
+    "ba": lambda seed: generators.barabasi_albert(16, deg=2, seed=seed),
+    "rmat": lambda seed: generators.rmat(4, 48, seed=seed),
+    "chain": lambda seed: generators.chain(12),
+    "layered": lambda seed: generators.layered_dag(16, layers=4, deg=2,
+                                                   seed=seed),
+    "sink_heavy": lambda seed: generators.sink_heavy(16, 40, sink_frac=0.5,
+                                                     seed=seed),
+}
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.sampled_from(sorted(FAMILIES)), st.integers(0, 2**31 - 1),
+       st.data())
+def test_retrim_equals_scratch_trim(family, seed, data):
+    g = FAMILIES[family](seed % 7)
+    engine = plan_stream(g, capacity=8, load_factor=4.0)
+    rng = np.random.default_rng(seed)
+    n = g.n
+    n_steps = data.draw(st.integers(1, 4), label="steps")
+    for step in range(n_steps):
+        op = data.draw(st.sampled_from(["delete", "insert", "mixed",
+                                        "compact"]),
+                       label=f"op{step}")
+        if op == "compact":
+            engine.compact()
+        else:
+            deletions = insertions = None
+            if op in ("delete", "mixed"):
+                src, dst = engine.delta._live_edges()
+                k = min(data.draw(st.integers(1, 3), label=f"k{step}"),
+                        src.size)
+                if k:
+                    ids = rng.choice(src.size, k, replace=False)
+                    deletions = (src[ids], dst[ids])
+            if op in ("insert", "mixed"):
+                k = data.draw(st.integers(1, 3), label=f"j{step}")
+                insertions = (rng.integers(0, n, k), rng.integers(0, n, k))
+            engine.apply(deletions=deletions, insertions=insertions)
+        # the maintained fixpoint == a from-scratch trim of the
+        # materialized graph, after every single operation
+        snap = engine.snapshot()
+        got = np.asarray(engine.retrim().status).astype(bool)
+        want = trim_oracle(*snap.to_numpy())
+        assert (got == want).all(), (family, step, op)
+        # host and device overlay views never diverge
+        d = engine.delta
+        assert np.array_equal(np.asarray(d.tomb), d._tomb_np)
+        assert np.array_equal(np.asarray(d.ins_alive), d._ins_alive_np)
