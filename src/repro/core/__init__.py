@@ -3,16 +3,18 @@ contribution), plus its flagship application (SCC decomposition).
 
 The primary API is the compile-once engine families::
 
-    from repro.core import plan, plan_reach, plan_stream
+    from repro.core import plan, plan_reach, plan_stream, plan_peel
     engine = plan(graph, method="ac6", backend="dense", workers=16)
     result = engine.run(active=mask)
     reach  = plan_reach(graph).run(seeds=pivot, active=mask)
     stream = plan_stream(graph).apply(deletions=(du, dv))
+    peel   = plan_peel(graph).run()          # full out-degree coreness
 
 ``trim()`` remains as a one-shot convenience shim.
 """
 from .engine import BACKENDS, TrimEngine, plan
 from .graph import CSRGraph, DeltaCSR, TrimResult, worker_of
+from .peel import PeelEngine, PeelResult, coreness_oracle, plan_peel
 from .reach import REACH_BACKENDS, ReachEngine, ReachResult, plan_reach
 from .ref import complete, peeling_alpha as peeling_alpha_oracle, sound, trim_oracle
 from .registry import KernelSpec, available_methods, get_kernel, register_kernel
@@ -24,6 +26,7 @@ __all__ = [
     "plan", "TrimEngine", "BACKENDS",
     "plan_reach", "ReachEngine", "ReachResult", "REACH_BACKENDS",
     "plan_stream", "StreamEngine", "StreamResult", "STREAM_BACKENDS",
+    "plan_peel", "PeelEngine", "PeelResult", "coreness_oracle",
     "KernelSpec", "register_kernel", "get_kernel", "available_methods",
     "trim_oracle", "sound", "complete", "peeling_alpha",
     "peeling_alpha_oracle",

@@ -19,6 +19,12 @@ engine layers resolve their kernels through one mechanism (DESIGN.md §3):
   ``(transpose_arrays, overlay, state, updates, *, use_kernel, full)``
   and returns ``(overlay, state, rounds, dirty)`` — see
   :func:`repro.core.stream._run_stream_ac4`.
+* family ``"peel"`` — bucketed k-core peeling on the AC-4 counter
+  substrate (``core/peel.py``): ``"bucket"`` extracts each peel round's
+  frontier through the ``bucket_peel`` Pallas kernel.  Its ``run``
+  adapter takes ``(graph_arrays, transpose_arrays, active, *, k_stop,
+  use_kernel)`` and returns ``(coreness, peel_round, rounds)`` — see
+  :func:`repro.core.peel.peel_bucket_kernel`.
 
 A trim spec's ``run`` adapter has one uniform signature so every method is
 interchangeable under ``jax.jit`` / ``jax.vmap``::

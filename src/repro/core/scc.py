@@ -16,6 +16,10 @@ drained at once —
 * one batched :meth:`TrimEngine.run_batch_stacked` for the trim phase
   (forward on odd generations, backward on even ones, so both directions
   contribute over the run),
+* one batched **trim-2** dispatch eliminating size-1 and size-2 SCCs that
+  trimming cannot remove (self-loop singletons and mutually-captive
+  2-cycles; Wang et al., "Parallel Strong Connectivity Based on Faster
+  Reachability") before any pivot is spent on them,
 * one batched :meth:`ReachEngine.run_batch` each for FW and BW, so B
   pivots advance in one vmapped dispatch per direction.
 
@@ -39,6 +43,8 @@ dispatch and two batched reach dispatches (asserted against the engines'
 ``dispatches`` counters in the tests).
 """
 from __future__ import annotations
+
+import functools
 
 import numpy as np
 
@@ -74,12 +80,62 @@ def _chunks(masks, max_batch: int):
     return [masks[i:i + max_batch] for i in range(0, b, max_batch)]
 
 
+@functools.lru_cache(maxsize=None)
+def _trim2_runner():
+    """Jitted, vmapped size-≤2 SCC detector — one device dispatch per
+    worklist generation (per ``max_batch`` chunk).
+
+    A live vertex pair {u, v} is a size-2 SCC *detectable locally* when
+    the two are mutually captive (Wang et al.'s trim-2): every live
+    out-edge of u goes to v and vice versa (any cycle through either must
+    be the 2-cycle), or symmetrically every live in-edge (any cycle must
+    enter through the 2-cycle).  With u == v the same predicate finds
+    self-loop singletons — vertices whose only live out-edge (or in-edge)
+    is their own loop, which trimming can never remove.  One-sided
+    captivity is *not* sound (a fully-captive u merges into SCC(v), which
+    may be larger), so only the two symmetric forms are used.
+
+    Degrees/neighbors come from four masked segment reductions over G and
+    Gᵀ edges: out/in live degree, and the unique live successor/
+    predecessor (a segment max, exact whenever the degree is 1 — the only
+    case it is read).  Returns ``(detected, partner)``: (B, n) bool and
+    (B, n) int32 (partner == index for singletons and undetected rows).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    def detect(src, dst, t_src, t_dst, live):
+        n = live.shape[0]
+        idx = jnp.arange(n, dtype=jnp.int32)
+        le = live[src] & live[dst]
+        te = live[t_src] & live[t_dst]
+        outdeg = jax.ops.segment_sum(le.astype(jnp.int32), src,
+                                     num_segments=n)
+        indeg = jax.ops.segment_sum(te.astype(jnp.int32), t_src,
+                                    num_segments=n)
+        succ = jax.ops.segment_max(jnp.where(le, dst, -1), src,
+                                   num_segments=n)
+        pred = jax.ops.segment_max(jnp.where(te, t_dst, -1), t_src,
+                                   num_segments=n)
+        cap_out = live & (outdeg == 1)
+        s = jnp.clip(succ, 0, n - 1)
+        pair_out = cap_out & cap_out[s] & (succ[s] == idx)
+        cap_in = live & (indeg == 1)
+        p = jnp.clip(pred, 0, n - 1)
+        pair_in = cap_in & cap_in[p] & (pred[p] == idx)
+        detected = pair_out | pair_in
+        partner = jnp.where(pair_out, succ, jnp.where(pair_in, pred, idx))
+        return detected, partner.astype(jnp.int32)
+
+    return jax.jit(jax.vmap(detect, in_axes=(None, None, None, None, 0)))
+
+
 def scc_decompose(graph: CSRGraph, use_trim: bool = True,
                   trim_method: str = "ac6", trim_transpose: bool = True,
                   max_pivots: int = 1_000_000, trim_backend: str = "dense",
                   reach_backend: str = "windowed", window: int = 16,
                   counters: bool = False, max_batch: int = 1024,
-                  active=None):
+                  active=None, trim2: bool = True):
     """Return (labels, stats). labels: (n,) int64 component ids (dense).
 
     ``active`` restricts decomposition to an induced subgraph: only
@@ -111,12 +167,23 @@ def scc_decompose(graph: CSRGraph, use_trim: bool = True,
     tens of thousands of (n,) regions into one dispatch.  Worklists up to
     ``max_batch`` regions keep the one-trim-two-reach dispatch contract
     per generation.
+
+    ``trim2`` (default on) runs a size-≤2 SCC elimination between the
+    trim and pivot phases of every generation: self-loop singletons and
+    mutually-captive 2-cycles — which trimming can never remove and which
+    would otherwise each consume a pivot (one FW-BW generation apiece
+    when they chain through a region) — are detected in one batched
+    dispatch and labeled directly.  Generations whose worklist dies in
+    the trim phase skip it entirely, so fully-trimmable graphs pay
+    nothing.  ``stats`` gains ``trim2_removed`` (vertices), ``trim2_sccs``
+    (labels assigned), and ``trim2_dispatches``.
     """
     import jax.numpy as jnp
 
     n = graph.n
     stats = {"generations": 0, "trim_passes": 0, "trimmed_total": 0,
              "pivots": 0, "trim_dispatches": 0, "reach_dispatches": 0,
+             "trim2_removed": 0, "trim2_sccs": 0, "trim2_dispatches": 0,
              "trim_edges_traversed": 0 if counters else None,
              "engine_traces": 0, "transpose_builds": 1}
     if n == 0:
@@ -144,6 +211,13 @@ def scc_decompose(graph: CSRGraph, use_trim: bool = True,
                           transpose=gt)
     bw_reach = plan_reach(gt, backend=reach_backend, window=window,
                           transpose=graph)
+    if trim2:
+        # G and Gᵀ edge arrays for the size-≤2 detector (device-resident,
+        # shared across every generation); the Gᵀ pair reuses the one
+        # transpose build above
+        t2_arrs = (graph.edge_sources(), graph.indices,
+                   gt.edge_sources(), gt.indices)
+        t2_fn = _trim2_runner()
 
     labels = jnp.full((n,), -1, jnp.int32)   # device-resident until the end
     next_label = 0
@@ -195,6 +269,40 @@ def scc_decompose(graph: CSRGraph, use_trim: bool = True,
                 labels = jnp.where(dead_union, next_label + rank, labels)
                 next_label += k
                 stats["trimmed_total"] += k
+
+        if trim2 and live_host.any():
+            # one batched dispatch (per max_batch chunk) detects size-≤2
+            # SCCs across every pending region; each pair/singleton gets
+            # one label keyed by its representative (min endpoint) and
+            # leaves the worklist before any pivot is spent on it
+            parts2 = [t2_fn(*t2_arrs, jnp.asarray(c))
+                      for c in _chunks(live_host, max_batch)]
+            stats["trim2_dispatches"] += len(parts2)
+            det = jnp.concatenate([p[0] for p in parts2])
+            # regions are disjoint, so the per-vertex partner/detected
+            # unions keep one value per vertex
+            partner = jnp.max(
+                jnp.concatenate([jnp.where(p[0], p[1], -1)
+                                 for p in parts2]), axis=0)
+            det_union = jnp.any(det, axis=0)
+            idx = jnp.arange(n, dtype=jnp.int32)
+            is_rep = det_union & (idx <= partner)
+            rep = jnp.where(det_union, jnp.minimum(idx, partner), idx)
+            rank2 = jnp.cumsum(is_rep.astype(jnp.int32)) - 1
+            # one device->host transfer serves the label counter, the
+            # removal stat, and the worklist bookkeeping
+            blob2 = np.asarray(jnp.concatenate(
+                [is_rep[None], det_union[None],
+                 jnp.asarray(live_host) & ~det]))
+            n_sccs = int(blob2[0].sum())
+            if n_sccs:
+                labels = jnp.where(det_union,
+                                   next_label + rank2[rep], labels)
+                next_label += n_sccs
+                stats["trim2_sccs"] += n_sccs
+                stats["trim2_removed"] += int(blob2[1].sum())
+                live_host = blob2[2:]
+
         keep = np.nonzero(live_host.any(axis=1))[0]
         if keep.size == 0:
             continue

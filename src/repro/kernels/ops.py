@@ -10,6 +10,7 @@ from __future__ import annotations
 import jax
 
 from . import ref
+from .bucket_peel import bucket_peel_pallas as _bpl
 from .counter_scatter import counter_scatter_pallas as _csc
 from .first_live_scan import first_live_scan as _fls
 from .frontier_expand import frontier_expand as _fex
@@ -78,3 +79,11 @@ def counter_scatter(counters, status, upd_src, upd_delta,
         return _csc(counters, status, upd_src, upd_delta,
                     interpret=not on_tpu(), **kw)
     return ref.counter_scatter_ref(counters, status, upd_src, upd_delta)
+
+
+def bucket_peel(counters, alive, k, use_kernel: bool | None = None, **kw):
+    if use_kernel is None:
+        use_kernel = on_tpu()
+    if use_kernel:
+        return _bpl(counters, alive, k, interpret=not on_tpu(), **kw)
+    return ref.bucket_peel_ref(counters, alive, k)

@@ -107,6 +107,12 @@ def counter_scatter_ref(counters, status, upd_src, upd_delta):
     return new, status & (new <= 0)
 
 
+def bucket_peel_ref(counters, alive, k):
+    """Bucket extraction — the jnp twin of ``kernels.bucket_peel``: alive
+    vertices whose support counter sits at or below the bucket level."""
+    return alive & (counters <= jnp.asarray(k, counters.dtype))
+
+
 def frontier_expand_ref(flags, valid, pending):
     """Row-wise masked OR — the jnp twin of ``kernels.frontier_expand``."""
     return pending & jnp.any(flags & valid, axis=1)

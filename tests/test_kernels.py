@@ -6,6 +6,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.bucket_peel import bucket_peel_pallas
 from repro.kernels.counter_scatter import counter_scatter_pallas
 from repro.kernels.first_live_scan import first_live_scan
 from repro.kernels.flash_attention import flash_attention
@@ -100,6 +101,64 @@ def test_counter_scatter(n, b, bv, bu):
                                             interpret=True)
     assert (same_c == counters).all()
     assert (same_d == (status & (counters <= 0))).all()
+
+
+@pytest.mark.parametrize("n,b,bv,bu", [(64, 32, 64, 8), (333, 64, 128, 16)])
+def test_counter_scatter_duplicate_sources(n, b, bv, bu):
+    """B updates landing on the SAME vertex in one batch must all
+    accumulate (the membership-matrix reduction sums every hit row, not
+    just one) — on top of a background of mixed random updates."""
+    counters = jnp.asarray(RNG.integers(1, 6, n), jnp.int32)
+    status = jnp.ones(n, bool)
+    hot = int(RNG.integers(0, n))
+    # half the batch hits `hot`, the rest is random (duplicates likely)
+    src = np.where(np.arange(b) % 2 == 0, hot, RNG.integers(0, n, b))
+    delta = RNG.integers(-2, 3, b)
+    got_c, got_d = counter_scatter_pallas(
+        jnp.asarray(counters), status, jnp.asarray(src, jnp.int32),
+        jnp.asarray(delta, jnp.int32), block_v=bv, block_u=bu,
+        interpret=True)
+    # independent numpy oracle (not the jnp ref twin)
+    want = np.asarray(counters).copy()
+    np.add.at(want, src, delta)
+    assert np.array_equal(np.asarray(got_c), want)
+    assert np.array_equal(np.asarray(got_d), want <= 0)
+    # all-duplicates batch: every entry adjusts one vertex
+    src1 = jnp.full((b,), hot, jnp.int32)
+    delta1 = jnp.asarray(RNG.integers(-2, 3, b), jnp.int32)
+    one_c, _ = counter_scatter_pallas(jnp.asarray(counters), status, src1,
+                                      delta1, block_v=bv, block_u=bu,
+                                      interpret=True)
+    want1 = np.asarray(counters).copy()
+    want1[hot] += int(np.asarray(delta1).sum())
+    assert np.array_equal(np.asarray(one_c), want1)
+
+
+@pytest.mark.parametrize("n,bv", [(333, 128), (64, 64), (1024, 256),
+                                  (7, 512), (513, 512)])
+def test_bucket_peel(n, bv):
+    counters = jnp.asarray(RNG.integers(-2, 8, n), jnp.int32)
+    alive = jnp.asarray(RNG.random(n) < 0.6)
+    for k in (0, 1, 3, 7):
+        got = bucket_peel_pallas(counters, alive, jnp.int32(k), block_v=bv,
+                                 interpret=True)
+        want = ref.bucket_peel_ref(counters, alive, k)
+        assert got.dtype == want.dtype == jnp.bool_
+        assert (got == want).all()
+    # block skipping: an all-dead bucket (no alive vertex) is all-False
+    none = bucket_peel_pallas(counters, jnp.zeros(n, bool), jnp.int32(5),
+                              block_v=bv, interpret=True)
+    assert not bool(none.any())
+
+
+def test_bucket_peel_empty():
+    got = bucket_peel_pallas(jnp.zeros((0,), jnp.int32),
+                             jnp.zeros((0,), bool), jnp.int32(0),
+                             interpret=True)
+    assert got.shape == (0,) and got.dtype == jnp.bool_
+    want = ref.bucket_peel_ref(jnp.zeros((0,), jnp.int32),
+                               jnp.zeros((0,), bool), 0)
+    assert want.shape == (0,)
 
 
 @pytest.mark.parametrize("n,W,bv", [(333, 16, 128), (64, 8, 64),

@@ -1,0 +1,160 @@
+"""Deterministic PeelEngine coverage: coreness values on known graphs,
+bounded runs, the degeneracy-order byproduct, batching, dispatch
+accounting, and argument validation (DESIGN.md §10)."""
+import numpy as np
+import pytest
+
+from repro.core import CSRGraph, plan, plan_peel, coreness_oracle
+from repro.core.registry import available_methods
+
+
+def graph_with_cores():
+    """A 2-out-core (complete digraph K4 minus loops has out-degree 3 —
+    use a 4-cycle with chords for out-degree 2), a 1-core cycle hanging
+    off it, and a trimmable tail: coreness values 0, 1, 2 all present."""
+    #  core: 0,1,2,3 each with two out-edges inside the core
+    src = [0, 0, 1, 1, 2, 2, 3, 3]
+    dst = [1, 2, 2, 3, 3, 0, 0, 1]
+    #  1-core: 4 -> 5 -> 4 (2-cycle), fed from the core
+    src += [3, 4, 5]
+    dst += [4, 5, 4]
+    #  tail: 6 -> 7 (both trim away)
+    src += [5, 6, 7]
+    dst += [6, 7, 5]
+    # 7 -> 5 makes {5,6,7}... keep the tail dead: replace with sink edge
+    src[-1], dst[-1] = 6, 7
+    return CSRGraph.from_edges(8, src, dst)
+
+
+def test_registry_family():
+    assert "bucket" in available_methods("peel")
+    with pytest.raises(ValueError, match="unknown method"):
+        plan_peel(graph_with_cores(), method="nope")
+
+
+def test_coreness_known_values():
+    g = graph_with_cores()
+    res = plan_peel(g).run()
+    core = np.asarray(res.coreness)
+    assert np.array_equal(core, coreness_oracle(*g.to_numpy()))
+    assert core[0] == core[1] == core[2] == core[3] == 2
+    assert core[4] == core[5] == 1
+    assert core[6] == core[7] == 0
+    assert res.max_core == 2
+    # k_core masks nest: k_core(2) ⊂ k_core(1) ⊂ k_core(0) = everything
+    k0, k1, k2 = (np.asarray(res.k_core(k)) for k in (0, 1, 2))
+    assert k0.all() and (k2 <= k1).all() and (k1 <= k0).all()
+    assert k1.sum() == 6 and k2.sum() == 4
+
+
+def test_bounded_run_stops_early_and_clamps():
+    g = graph_with_cores()
+    engine = plan_peel(g)
+    res = engine.run(k=1)
+    core = np.asarray(res.coreness)
+    # survivors of the bounded run are clamped at k_stop, not resolved
+    assert set(core.tolist()) == {0, 1}
+    assert np.array_equal(core >= 1, np.asarray(engine.run().k_core(1)))
+    with pytest.raises(ValueError, match="were not computed"):
+        res.k_core(2)
+    assert res.rounds <= engine.run().rounds
+    # k=0 is a legitimate bound: status must be the 0-core (all-active)
+    # mask, not a refused k_core(1) lookup
+    res0 = engine.run(k=0)
+    assert np.asarray(res0.status).tolist() == [1] * g.n
+
+
+def test_degeneracy_order_certificate():
+    """Peel order: every vertex has at most coreness(v) out-neighbors in
+    its own peel round or later."""
+    rng = np.random.default_rng(5)
+    for trial in range(10):
+        n = int(rng.integers(2, 50))
+        m = int(rng.integers(0, 5 * n))
+        g = CSRGraph.from_edges(n, rng.integers(0, n, m),
+                                rng.integers(0, n, m))
+        res = plan_peel(g).run().materialize()
+        order = res.degeneracy_order()
+        assert sorted(order.tolist()) == list(range(n))
+        indptr, indices = g.to_numpy()
+        rounds = res.peel_round
+        for v in range(n):
+            succs = indices[indptr[v]:indptr[v + 1]]
+            later = (rounds[succs] >= rounds[v]).sum()
+            assert later <= res.coreness[v], (trial, v)
+
+
+def test_run_batch_matches_sequential_runs():
+    g = graph_with_cores()
+    engine = plan_peel(g)
+    rng = np.random.default_rng(0)
+    masks = np.stack([rng.random(g.n) < 0.7 for _ in range(4)])
+    batch = engine.run_batch(masks)
+    assert batch.coreness.shape == (4, g.n)
+    for i in range(4):
+        single = engine.run(active=masks[i])
+        assert np.array_equal(np.asarray(batch.coreness[i]),
+                              np.asarray(single.coreness))
+        assert np.array_equal(np.asarray(batch.peel_round[i]),
+                              np.asarray(single.peel_round))
+        assert batch.rounds[i] == single.rounds
+    with pytest.raises(ValueError, match="per-graph"):
+        batch.degeneracy_order()
+
+
+def test_dispatch_and_transpose_accounting():
+    g = graph_with_cores()
+    trim_engine = plan(g, method="ac4")
+    gt = trim_engine.transpose
+    engine = plan_peel(g, transpose=gt)       # pre-seeded: no second build
+    engine.run()
+    engine.run()                               # same variant: no retrace
+    engine.run(k=1)                            # new static k: one retrace
+    assert engine.dispatches == 3
+    assert engine.transpose_builds == 0
+    # batch is its own traced variant but still one dispatch
+    engine.run_batch(np.ones((2, g.n), bool))
+    assert engine.dispatches == 4
+
+
+def test_degenerate_paths_no_dispatch():
+    for g in (CSRGraph.from_edges(0, [], []), CSRGraph.from_edges(4, [], [])):
+        engine = plan_peel(g)
+        res = engine.run()
+        assert engine.dispatches == 0
+        core = np.asarray(res.coreness)
+        assert np.array_equal(core, np.zeros(g.n, np.int32))
+        assert np.array_equal(core, coreness_oracle(*g.to_numpy()))
+        batch = engine.run_batch(np.ones((3, g.n), bool))
+        assert batch.coreness.shape == (3, g.n)
+        assert engine.dispatches == 0
+    # k = 0 peels nothing: zero rounds, everything "survives" into the
+    # 0-core
+    res0 = plan_peel(CSRGraph.from_edges(4, [], [])).run(k=0)
+    assert res0.rounds == 0 and np.asarray(res0.k_core(0)).all()
+
+
+def test_validation():
+    g = graph_with_cores()
+    engine = plan_peel(g)
+    with pytest.raises(ValueError, match="k must be"):
+        engine.run(k=-1)
+    with pytest.raises(ValueError, match="k must be"):
+        engine.run(k=True)
+    with pytest.raises(ValueError, match="active mask"):
+        engine.run(active=np.ones(3, bool))
+    with pytest.raises(ValueError, match="active_masks"):
+        engine.run_batch(np.ones(g.n, bool))
+
+
+def test_use_kernel_paths_agree():
+    """The Pallas bucket-extraction path (interpret mode off-TPU) and the
+    jnp ref twin produce identical coreness."""
+    rng = np.random.default_rng(9)
+    n, m = 60, 240
+    g = CSRGraph.from_edges(n, rng.integers(0, n, m), rng.integers(0, n, m))
+    ref = plan_peel(g, use_kernel=False).run()
+    pal = plan_peel(g, use_kernel=True).run()
+    assert np.array_equal(np.asarray(ref.coreness), np.asarray(pal.coreness))
+    assert np.array_equal(np.asarray(ref.peel_round),
+                          np.asarray(pal.peel_round))

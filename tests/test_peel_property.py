@@ -1,0 +1,115 @@
+"""Property tests for the peel family: engine coreness vs the Matula–Beck
+host oracle, k-core maximality, and trim-2 label parity — over random
+graphs from all six benchmark generator families.
+
+Lives in its own module so the importorskip cannot take the deterministic
+peel coverage (tests/test_peel.py, tests/test_differential.py) down with
+it when the optional hypothesis dep is absent."""
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property-based suite needs the optional hypothesis dep "
+           "(pip install -e .[test]); deterministic peel coverage lives "
+           "in test_peel.py and test_differential.py")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import CSRGraph, plan, plan_peel, coreness_oracle
+from repro.core.scc import same_partition, scc_decompose, tarjan_oracle
+from repro.graphs import generators
+
+FAMILIES = ("ER", "BA", "RMAT", "chain", "layered", "sink_heavy")
+
+
+def small_graph(family: str, size: int, seed: int) -> CSRGraph:
+    """A miniature instance of each benchmark family (paper §9.1 plus the
+    structural analogues), sized for property-test throughput."""
+    if family == "ER":
+        return generators.erdos_renyi(n=size, m=3 * size, seed=seed)
+    if family == "BA":
+        return generators.barabasi_albert(n=size, deg=3, seed=seed)
+    if family == "RMAT":
+        return generators.rmat(n_log2=5, m=4 * size, seed=seed)
+    if family == "chain":
+        return generators.chain(size)
+    if family == "layered":
+        return generators.layered_dag(n=size, layers=4, deg=2, seed=seed)
+    if family == "sink_heavy":
+        return generators.sink_heavy(n=size, m=3 * size, sink_frac=0.5,
+                                     seed=seed)
+    raise AssertionError(family)
+
+
+def host_k_core(indptr, indices, k: int) -> np.ndarray:
+    """Reference k-core: greedily delete vertices of induced live
+    out-degree < k until none remains.  The survivor set is the unique
+    maximal subgraph of min out-degree >= k."""
+    n = len(indptr) - 1
+    src = np.repeat(np.arange(n), np.diff(np.asarray(indptr)))
+    indices = np.asarray(indices)
+    live = np.ones(n, bool)
+    while True:
+        deg = np.zeros(n, np.int64)
+        if len(indices):
+            np.add.at(deg, src, (live[src] & live[indices]).astype(np.int64))
+        drop = live & (deg < k)
+        if not drop.any():
+            return live
+        live &= ~drop
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.sampled_from(FAMILIES), st.integers(4, 40),
+       st.integers(0, 2**31 - 1))
+def test_coreness_matches_host_oracle(family, size, seed):
+    g = small_graph(family, size, seed)
+    res = plan_peel(g).run()
+    assert np.array_equal(np.asarray(res.coreness),
+                          coreness_oracle(*g.to_numpy()))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.sampled_from(FAMILIES), st.integers(4, 30),
+       st.integers(0, 2**31 - 1), st.integers(0, 5))
+def test_k_core_is_maximal_min_degree_subgraph(family, size, seed, k):
+    """k_core(k) is exactly the greedy-deletion fixpoint: every member
+    keeps out-degree >= k inside the mask (soundness) and nothing outside
+    could be added back (maximality — the fixpoint is the unique maximal
+    such subgraph)."""
+    g = small_graph(family, size, seed)
+    res = plan_peel(g).run()
+    mask = np.asarray(res.k_core(k))
+    indptr, indices = g.to_numpy()
+    want = host_k_core(indptr, indices, k)
+    assert np.array_equal(mask, want)
+    # explicit soundness re-check of the engine mask, independent of want
+    src = np.repeat(np.arange(g.n), np.diff(indptr))
+    deg = np.zeros(g.n, np.int64)
+    if len(indices):
+        np.add.at(deg, src, (mask[src] & mask[indices]).astype(np.int64))
+    assert (deg[mask] >= k).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.sampled_from(FAMILIES), st.integers(4, 30),
+       st.integers(0, 2**31 - 1))
+def test_peel_k1_matches_trim_engine(family, size, seed):
+    g = small_graph(family, size, seed)
+    got = np.asarray(plan_peel(g).run(k=1).status)
+    want = np.asarray(plan(g, method="ac4").run().status)
+    assert np.array_equal(got, want)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.sampled_from(FAMILIES), st.integers(4, 30),
+       st.integers(0, 2**31 - 1), st.booleans())
+def test_trim2_labels_match_trim2_free_driver(family, size, seed, use_trim):
+    g = small_graph(family, size, seed)
+    with_t2, s2 = scc_decompose(g, use_trim=use_trim, trim2=True, window=4)
+    without, _ = scc_decompose(g, use_trim=use_trim, trim2=False, window=4)
+    assert same_partition(with_t2, without)
+    assert same_partition(with_t2, tarjan_oracle(*g.to_numpy()))
+    # trim-2 labels are SCCs of size <= 2 by construction
+    if s2["trim2_sccs"]:
+        assert s2["trim2_removed"] <= 2 * s2["trim2_sccs"]
