@@ -1,0 +1,170 @@
+"""Observability benchmark: the paper's per-worker traversed-edges
+comparison (§9, Table 7 / Fig. 4) reproduced on the instrumented engines
+(DESIGN.md §11), on the six graph families.
+
+    PYTHONPATH=src python benchmarks/bench_obs.py          # BENCH_obs.json
+    PYTHONPATH=src python benchmarks/bench_obs.py --smoke  # CI smoke sizes
+
+The paper's central experimental claim is about *work distribution*: with
+16 workers, AC-3-based trimming traverses up to 58.3x more edges per
+worker than AC-6-based.  Traversed-edge counts are deterministic — exact
+integers, independent of machine and load — so unlike the wall-clock
+benches this table is bit-reproducible and is what
+``benchmarks/check_regression.py`` gates on.
+
+Per family, for each trim method (ac3, ac4, ac4*, ac6):
+
+  edges_total     — total traversed edges to the fixpoint (the paper's
+                    work metric; for AC-4 this includes the one-off
+                    counter-initialization scan, as in the paper).
+  max_per_worker  — the busiest worker's traversed edges under the
+                    paper's chunked round-robin partition (16 workers).
+  imbalance       — max_per_worker / mean_per_worker (1.0 = perfectly
+                    balanced).
+  rounds          — fixpoint rounds, with the per-round frontier/edge
+                    series cross-checked against the per-worker totals
+                    (sum over rounds == sum over workers, exact).
+
+plus one instrumented ``scc_decompose`` run (trim + trim2 + FW-BW pivots)
+whose per-generation spans and accumulated per-worker trim work come from
+the same telemetry.  The headline check — printed and embedded in the
+JSON — is the paper's ordering on the busiest worker:
+
+    AC-3 > AC-4 >= AC-6        (max traversed edges per worker)
+
+Output is one JSON document (``common.make_doc`` envelope: schema version
++ environment metadata) so the trajectory is machine-checkable across
+PRs.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro import obs
+from repro.core import plan
+from repro.core.scc import scc_decompose
+from repro.graphs import generators
+
+try:
+    from . import common
+except ImportError:
+    import common
+
+WORKERS = 16
+METHODS = ("ac3", "ac4", "ac4*", "ac6")
+
+# vertex -> worker assignment: finest round-robin.  The paper's
+# schedule(dynamic, 4096) chunking assumes millions of vertices; at these
+# sizes chunk=1 is the closest static analogue of its load balancing.
+CHUNK = 1
+
+# The families are parameterized for the regime the paper's comparison
+# measures: a large trimmable fraction with non-trivial propagation depth
+# (their BEEM/real inputs, Table 6).  That matters because per paper
+# Table 2 the ordering is *input-dependent*: AC-4 always pays Theta(n+m)
+# (counter-init scan) while AC-3's re-scans only dominate when the
+# fixpoint runs deep — on a dense, barely-trimmable graph AC-3 legally
+# traverses fewer arcs than AC-4 and the paper's 58.3x blowup never
+# materializes.  Hence subcritical ER (avg deg 1.2), BA at deg 3, and a
+# diagonal-skew R-MAT (a=d=0.4: community structure with flat degree
+# tails, so no single mega-hub in-list dominates one worker's charge).
+SIZES = {
+    "ER": dict(n=30_000, m=36_000, seed=1),
+    "BA": dict(n=20_000, deg=3, seed=1),
+    "RMAT": dict(n_log2=14, m=20_480, seed=1, a=0.4, b=0.1, c=0.1),
+    "chain": dict(n=5_000),
+    "layered": dict(n=30_000, layers=37, deg=4, seed=1),
+    "sink_heavy": dict(n=30_000, m=120_000, sink_frac=0.9, seed=1),
+}
+SMOKE_SIZES = {
+    "ER": dict(n=2_000, m=2_400, seed=1),
+    "BA": dict(n=2_000, deg=3, seed=1),
+    "RMAT": dict(n_log2=10, m=1_280, seed=1, a=0.4, b=0.1, c=0.1),
+    "chain": dict(n=500),
+    "layered": dict(n=2_000, layers=21, deg=4, seed=1),
+    "sink_heavy": dict(n=2_000, m=8_000, sink_frac=0.9, seed=1),
+}
+
+
+def bench_method(g, method: str):
+    engine = plan(g, method=method, workers=WORKERS, chunk=CHUNK,
+                  instrument=True)
+    res = engine.run(counters=True)
+    pw = np.asarray(res.per_worker_edges).astype(np.int64)
+    rs = res.round_stats
+    # telemetry consistency: per-round totals == per-worker totals, exact
+    assert int(rs.total("r_edges")) == int(pw.sum()), \
+        f"{method}: round stats disagree with per-worker counters"
+    return {
+        "edges_total": int(pw.sum()),
+        "max_per_worker": int(pw.max()),
+        "imbalance": round(float(pw.max() / max(pw.mean(), 1e-9)), 3),
+        "rounds": int(res.rounds),
+        "trimmed": int(res.n_trimmed),
+    }
+
+
+def bench_scc(g):
+    with obs.recording() as rec:
+        _, stats = scc_decompose(g, counters=True, workers=WORKERS,
+                                 chunk=CHUNK, instrument=True)
+    pw = stats["per_worker_edges"]
+    return {
+        "generations": stats["generations"],
+        "trim_rounds": stats["trim_rounds"],
+        "reach_rounds": stats["reach_rounds"],
+        "trim_edges_total": int(pw.sum()),
+        "trim_max_per_worker": int(pw.max()),
+        "trim_imbalance": round(float(pw.max() / max(pw.mean(), 1e-9)), 3),
+        "dispatch_spans": len(rec.select("dispatch", cat="engine")),
+        "generation_spans": len(rec.select("generation", cat="scc")),
+    }
+
+
+def bench_family(name, kwargs):
+    factory, _ = generators.BENCHMARK_GRAPHS[name]
+    g = factory(**kwargs)
+    print(f"# {name}: n={g.n:,} m={g.m:,}", file=sys.stderr)
+    row = {"n": g.n, "m": g.m, "methods": {}, "scc": bench_scc(g)}
+    for method in METHODS:
+        row["methods"][method] = bench_method(g, method)
+    mx = {m: row["methods"][m]["max_per_worker"] for m in METHODS}
+    row["ordering_ok"] = bool(mx["ac3"] > mx["ac4"] >= mx["ac6"])
+    print(f"#   max/worker  ac3 {mx['ac3']:,} | ac4 {mx['ac4']:,} | "
+          f"ac4* {mx['ac4*']:,} | ac6 {mx['ac6']:,}  "
+          f"(AC-3 > AC-4 >= AC-6: {row['ordering_ok']})", file=sys.stderr)
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny graphs (CI); counts stay deterministic")
+    ap.add_argument("--out", default="BENCH_obs.json")
+    ap.add_argument("--families", nargs="*", default=None)
+    args = ap.parse_args()
+    sizes = SMOKE_SIZES if args.smoke else SIZES
+    families = args.families or list(sizes)
+
+    doc = common.make_doc("obs", smoke=args.smoke, workers=WORKERS,
+                          families={})
+    for name in families:
+        doc["families"][name] = bench_family(name, sizes[name])
+    doc["ordering_ok"] = all(r["ordering_ok"]
+                             for r in doc["families"].values())
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    print(json.dumps(doc, indent=2))
+    print(f"# AC-3 > AC-4 >= AC-6 max-per-worker ordering on every "
+          f"family: {doc['ordering_ok']}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

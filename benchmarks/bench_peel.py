@@ -44,6 +44,11 @@ from repro.core import plan, plan_peel
 from repro.core.scc import same_partition, scc_decompose
 from repro.graphs import generators
 
+try:
+    from . import common
+except ImportError:
+    import common
+
 SIZES = {
     "ER": dict(n=30_000, m=240_000, seed=1),
     "BA": dict(n=20_000, deg=8, seed=1),
@@ -166,8 +171,8 @@ def main():
     repeats = 2 if args.smoke else args.repeats
     families = args.families or list(sizes)
 
-    doc = {"bench": "peel", "smoke": args.smoke, "repeats": repeats,
-           "fringe": fringe, "families": {}}
+    doc = common.make_doc("peel", smoke=args.smoke, repeats=repeats,
+                          fringe=fringe, families={})
     for name in families:
         doc["families"][name] = bench_family(name, sizes[name], fringe,
                                              repeats)

@@ -37,6 +37,11 @@ from repro.core import plan
 from repro.core.scc import same_partition, scc_decompose
 from repro.graphs import generators
 
+try:
+    from . import common
+except ImportError:
+    import common
+
 # configs/trim_graphs.py families at benchmark scale: every family keeps
 # its structural signature (paper Table 6) at sizes where the host-BFS
 # baseline finishes in minutes on one core
@@ -184,8 +189,8 @@ def main():
     repeats = 1 if args.smoke else args.repeats
     families = args.families or list(sizes)
 
-    doc = {"bench": "scc", "smoke": args.smoke, "repeats": repeats,
-           "families": {}}
+    doc = common.make_doc("scc", smoke=args.smoke, repeats=repeats,
+                          families={})
     for name in families:
         doc["families"][name] = bench_family(name, sizes[name], repeats)
     with open(args.out, "w") as f:

@@ -42,6 +42,11 @@ from repro.core import plan
 from repro.core.stream import plan_stream
 from repro.graphs import generators
 
+try:
+    from . import common
+except ImportError:
+    import common
+
 SIZES = {
     "ER": dict(n=50_000, m=400_000, seed=1, simple=True),
     "BA": dict(n=20_000, deg=8, seed=1),
@@ -127,8 +132,8 @@ def main():
     batches = 3 if args.smoke else args.batches
     families = args.families or list(sizes)
 
-    doc = {"bench": "stream", "smoke": args.smoke, "batches": batches,
-           "families": {}}
+    doc = common.make_doc("stream", smoke=args.smoke, batches=batches,
+                          families={})
     for name in families:
         doc["families"][name] = bench_family(name, sizes[name], batches)
     with open(args.out, "w") as f:

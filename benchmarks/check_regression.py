@@ -1,0 +1,263 @@
+"""Bench regression gate: compare a fresh benchmark run against the
+committed ``BENCH_*.json`` baselines, within a tolerance band.
+
+    PYTHONPATH=src python benchmarks/check_regression.py --quick
+    PYTHONPATH=src python benchmarks/check_regression.py \
+        --baseline BENCH_obs.json --fresh /tmp/BENCH_obs.json
+
+Three outcomes per comparison, reflected in the exit code:
+
+  OK       — docs comparable, no regression beyond tolerance.  exit 0.
+  REFUSED  — the two documents were measured under different
+             environments (jax version, backend, or device kind differ,
+             per the ``env`` envelope ``common.make_doc`` stamps into
+             every document).  Numbers are not comparable; refusing is
+             not a regression, so exit 0 unless ``--strict``.
+  FAIL     — a malformed/unversioned document (regenerate it), or a
+             deterministic key changed, or a timing regressed beyond
+             ``--tolerance``.  exit 1.
+
+What is compared depends on how well the workloads match:
+
+  * Deterministic integer keys (traversed-edge counts, rounds, trimmed
+    counts, SCC/pivot/generation counts, ``ordering_ok``) must be
+    *exact* when the workload matches (same ``smoke`` flag and same
+    per-family n/m).  These are machine-independent: any drift is a
+    behavior change, not noise.
+  * Wall-clock keys (``*_ms``, ``updates_per_sec``) are gated only when
+    the workload matches AND the environment matches: fresh may not be
+    slower than baseline by more than ``--tolerance`` (default 2.0x —
+    wide because CI machines are noisy; the gate is for order-of-
+    magnitude regressions, not 10% drift).
+  * When workloads differ (e.g. fresh ``--smoke`` vs committed full
+    run), only scale-free claims are checked: document well-formedness
+    and ``ordering_ok`` (the paper's AC-3 > AC-4 >= AC-6 per-worker
+    ordering holds at every size).
+
+``--quick`` runs ``bench_obs --smoke`` fresh, gates it against the
+committed ``BENCH_obs.json``, and schema-validates every other committed
+``BENCH_*.json`` — cheap enough for CI on every push.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+#: env keys that must match for wall-clock numbers to be comparable
+ENV_KEYS = ("jax_version", "backend", "device_kind")
+
+#: timing keys are gated loosely (slower-only); everything else numeric
+#: and deterministic is gated exactly
+TIMING_SUFFIXES = ("_ms", "_per_sec")
+
+#: keys that are volatile by nature and never compared
+SKIP_KEYS = {"imbalance"}  # ratio of ints, already covered by the ints
+
+
+class Verdict:
+    OK = "OK"
+    REFUSED = "REFUSED"
+    FAIL = "FAIL"
+
+
+def _is_timing(key: str) -> bool:
+    return key.endswith(TIMING_SUFFIXES)
+
+
+def validate_doc(doc: dict, label: str) -> list[str]:
+    """Schema check: malformed baselines are a hard failure (the fix is
+    to regenerate the artifact, not to skip the gate)."""
+    problems = []
+    if not isinstance(doc, dict):
+        return [f"{label}: not a JSON object"]
+    schema = doc.get("schema")
+    if not isinstance(schema, int):
+        problems.append(f"{label}: missing integer 'schema' "
+                        f"(pre-envelope v1 document? regenerate it)")
+    elif schema != 2:
+        problems.append(f"{label}: schema {schema} != 2 "
+                        f"(regenerate with current benchmarks/)")
+    if not isinstance(doc.get("bench"), str):
+        problems.append(f"{label}: missing 'bench' name")
+    env = doc.get("env")
+    if not isinstance(env, dict):
+        problems.append(f"{label}: missing 'env' metadata")
+    else:
+        for k in ENV_KEYS:
+            if not env.get(k):
+                problems.append(f"{label}: env.{k} missing")
+    if not isinstance(doc.get("families"), dict):
+        problems.append(f"{label}: missing 'families' payload")
+    return problems
+
+
+def env_mismatch(baseline: dict, fresh: dict) -> list[str]:
+    b, f = baseline.get("env", {}), fresh.get("env", {})
+    return [f"env.{k}: baseline={b.get(k)!r} fresh={f.get(k)!r}"
+            for k in ENV_KEYS if b.get(k) != f.get(k)]
+
+
+def _workload_matches(baseline: dict, fresh: dict) -> bool:
+    """Same smoke flag and same per-family problem sizes."""
+    if baseline.get("smoke") != fresh.get("smoke"):
+        return False
+    bf, ff = baseline.get("families", {}), fresh.get("families", {})
+    if set(bf) != set(ff):
+        return False
+    return all(bf[k].get("n") == ff[k].get("n")
+               and bf[k].get("m") == ff[k].get("m") for k in bf)
+
+
+def _walk(prefix: str, b, f, tolerance: float, out: list[str]) -> None:
+    """Recursively compare baseline vs fresh values under one family."""
+    if isinstance(b, dict) and isinstance(f, dict):
+        for k in sorted(set(b) & set(f)):
+            if k in SKIP_KEYS:
+                continue
+            _walk(f"{prefix}.{k}", b[k], f[k], tolerance, out)
+        return
+    key = prefix.rsplit(".", 1)[-1]
+    if isinstance(b, bool) or isinstance(f, bool):
+        if b != f and b is True:
+            out.append(f"{prefix}: True -> {f}")
+    elif isinstance(b, (int, float)) and isinstance(f, (int, float)):
+        if _is_timing(key):
+            if b > 0 and f > b * tolerance:
+                out.append(f"{prefix}: {b} -> {f} "
+                           f"(> {tolerance:g}x tolerance)")
+        elif isinstance(b, int) and isinstance(f, int):
+            if b != f:
+                out.append(f"{prefix}: {b} -> {f} (deterministic key)")
+        else:
+            if not math.isclose(b, f, rel_tol=1e-6):
+                out.append(f"{prefix}: {b} -> {f} (deterministic key)")
+
+
+def compare_docs(baseline: dict, fresh: dict,
+                 tolerance: float = 2.0) -> tuple[str, list[str]]:
+    """Gate ``fresh`` against ``baseline``.
+
+    Returns ``(verdict, messages)`` where verdict is one of
+    ``Verdict.OK`` / ``Verdict.REFUSED`` / ``Verdict.FAIL``.  REFUSED
+    means the environments differ and wall-clock numbers are not
+    comparable — deterministic scale-free claims (``ordering_ok``) are
+    still checked; a violated claim upgrades REFUSED to FAIL.
+    """
+    problems = validate_doc(baseline, "baseline") + validate_doc(fresh, "fresh")
+    if problems:
+        return Verdict.FAIL, problems
+    if baseline["bench"] != fresh["bench"]:
+        return Verdict.FAIL, [
+            f"bench mismatch: baseline={baseline['bench']!r} "
+            f"fresh={fresh['bench']!r}"]
+
+    mismatches = env_mismatch(baseline, fresh)
+    workload_ok = _workload_matches(baseline, fresh)
+    regressions: list[str] = []
+
+    if mismatches or not workload_ok:
+        # only scale-free deterministic claims survive this comparison
+        for scope, doc in (("baseline", baseline), ("fresh", fresh)):
+            if doc.get("ordering_ok") is False:
+                regressions.append(f"{scope}: ordering_ok is False")
+            for fam, row in doc.get("families", {}).items():
+                if row.get("ordering_ok") is False:
+                    regressions.append(
+                        f"{scope}.families.{fam}: ordering_ok is False")
+        if regressions:
+            return Verdict.FAIL, regressions
+        if mismatches:
+            return Verdict.REFUSED, mismatches
+        return Verdict.OK, [
+            "workload differs (sizes/smoke flag); checked scale-free "
+            "claims only"]
+
+    for fam in sorted(baseline["families"]):
+        _walk(f"families.{fam}", baseline["families"][fam],
+              fresh["families"][fam], tolerance, regressions)
+    if baseline.get("ordering_ok") is True and fresh.get("ordering_ok") is False:
+        regressions.append("ordering_ok: True -> False")
+    if regressions:
+        return Verdict.FAIL, regressions
+    return Verdict.OK, []
+
+
+# -- CLI ----------------------------------------------------------------------
+
+def _load(path: Path) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def _report(label: str, verdict: str, messages: list[str]) -> None:
+    print(f"[{verdict}] {label}")
+    for msg in messages:
+        print(f"    {msg}")
+
+
+def run_quick(tolerance: float) -> tuple[str, list[str]]:
+    """Fresh ``bench_obs --smoke`` vs the committed BENCH_obs.json."""
+    fresh_path = Path("/tmp/BENCH_obs_quick.json")
+    cmd = [sys.executable, str(REPO / "benchmarks" / "bench_obs.py"),
+           "--smoke", "--out", str(fresh_path)]
+    print(f"# running: {' '.join(cmd)}", file=sys.stderr)
+    proc = subprocess.run(cmd, capture_output=True, text=True)
+    if proc.returncode != 0:
+        return Verdict.FAIL, [f"bench_obs --smoke failed:\n{proc.stderr}"]
+    return compare_docs(_load(REPO / "BENCH_obs.json"), _load(fresh_path),
+                        tolerance)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--baseline", type=Path,
+                    help="committed BENCH_*.json to gate against")
+    ap.add_argument("--fresh", type=Path,
+                    help="freshly produced BENCH_*.json")
+    ap.add_argument("--quick", action="store_true",
+                    help="run bench_obs --smoke and gate it against the "
+                         "committed BENCH_obs.json; also schema-validate "
+                         "every committed BENCH_*.json")
+    ap.add_argument("--tolerance", type=float, default=2.0,
+                    help="max fresh/baseline wall-clock ratio (default 2.0)")
+    ap.add_argument("--strict", action="store_true",
+                    help="treat REFUSED (env mismatch) as failure")
+    args = ap.parse_args()
+
+    failed = False
+    refused = False
+
+    if args.quick:
+        for p in sorted(REPO.glob("BENCH_*.json")):
+            problems = validate_doc(_load(p), p.name)
+            _report(p.name, Verdict.FAIL if problems else Verdict.OK,
+                    problems)
+            failed |= bool(problems)
+        verdict, messages = run_quick(args.tolerance)
+        _report("bench_obs --smoke vs BENCH_obs.json", verdict, messages)
+        failed |= verdict == Verdict.FAIL
+        refused |= verdict == Verdict.REFUSED
+    elif args.baseline and args.fresh:
+        verdict, messages = compare_docs(_load(args.baseline),
+                                         _load(args.fresh), args.tolerance)
+        _report(f"{args.fresh} vs {args.baseline}", verdict, messages)
+        failed |= verdict == Verdict.FAIL
+        refused |= verdict == Verdict.REFUSED
+    else:
+        ap.error("need --quick or both --baseline and --fresh")
+
+    if refused and not failed:
+        print("NOTE: comparison refused (environment mismatch) — this is "
+              "not a regression. Re-run on matching hardware/jax, or pass "
+              "--strict to fail on refusal.")
+    return 1 if failed or (refused and args.strict) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,4 +1,5 @@
-"""Shared benchmark machinery: graph cache, timing, CSV emission.
+"""Shared benchmark machinery: graph cache, timing, CSV emission, and the
+JSON document schema every ``BENCH_*.json`` emitter uses.
 
 Output contract (run.py): one CSV line per measurement,
     name,us_per_call,derived
@@ -6,9 +7,17 @@ Hardware note: this container exposes ONE physical core, so wall-clock
 "speedup vs workers" is not physically measurable; the paper's primary
 metric — deterministic traversed-edge counts per worker — is exact, and
 method-vs-method wall-time ratios on one core are real measurements.
+
+JSON contract (``make_doc``): every committed ``BENCH_*.json`` carries
+``schema`` (integer, bumped on layout changes) and ``env`` (jax version,
+backend, device kind/count, python, commit) so
+``benchmarks/check_regression.py`` can refuse cross-backend or
+cross-jax-version comparisons instead of reporting phantom regressions.
 """
 from __future__ import annotations
 
+import platform
+import subprocess
 import sys
 import time
 
@@ -18,6 +27,10 @@ import numpy as np
 
 from repro.core import CSRGraph, trim
 from repro.graphs import generators
+
+#: bump when the BENCH_*.json layout changes incompatibly.  Version 2
+#: introduced the schema/env envelope itself (v1 documents have neither).
+SCHEMA_VERSION = 2
 
 _CACHE: dict[str, CSRGraph] = {}
 
@@ -50,3 +63,40 @@ def timeit(fn, repeats: int = 3, warmup: int = 1):
 
 def emit(name: str, us_per_call: float, derived=""):
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def _commit() -> str | None:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            check=True).stdout.strip() or None
+    except Exception:
+        return None
+
+
+def bench_env() -> dict:
+    """The measurement environment, embedded in every BENCH_*.json.
+
+    ``check_regression.py`` treats jax_version/backend/device_kind as
+    comparison keys: numbers measured under different values of any of
+    them are not comparable and the gate refuses rather than guesses.
+    """
+    import jax
+
+    devs = jax.devices()
+    return {
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_kind": devs[0].device_kind if devs else "none",
+        "device_count": len(devs),
+        "python": platform.python_version(),
+        "commit": _commit(),
+    }
+
+
+def make_doc(bench: str, **fields) -> dict:
+    """The envelope for one benchmark document: schema + env + payload."""
+    doc = {"schema": SCHEMA_VERSION, "bench": bench, "env": bench_env()}
+    doc.update(fields)
+    return doc

@@ -14,22 +14,27 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from .. import obs
 from .common import per_worker_add, resolve_probe, worker_counts
 from .registry import KernelSpec, register_kernel
 
 
 @partial(jax.jit, static_argnames=("workers", "probe", "window",
-                                   "use_kernel", "counters"))
+                                   "use_kernel", "counters", "instrument",
+                                   "max_rounds"))
 def ac3_kernel(indptr, indices, worker_ids, workers: int, active=None, *,
                probe: str = "dense", window: int = 16,
-               use_kernel: bool | None = None, counters: bool = True):
+               use_kernel: bool | None = None, counters: bool = True,
+               instrument: bool = False, max_rounds: int = 0):
     """``active``: optional (n,) bool — trim the induced subgraph (vertices
     outside are treated as already DEAD).  Used by the SCC application.
 
     ``probe``/``window``/``use_kernel`` select the scan implementation
     (see ``common.resolve_probe``); ``counters=False`` skips per-worker
     counter accumulation entirely (the serving fast path) and returns
-    ``None`` in the counter slots.
+    ``None`` in the counter slots.  ``instrument=True`` (DESIGN.md §11)
+    threads ``(max_rounds,)`` per-round buffers — deaths and probed edges
+    per round — through the carry, returned as a sixth output.
     """
     n = indptr.shape[0] - 1
     deg = indptr[1:] - indptr[:-1]
@@ -61,6 +66,11 @@ def ac3_kernel(indptr, indices, worker_ids, workers: int, active=None, *,
             fsz = worker_counts(frontier, worker_ids, workers)
             new["per_worker"] = pw
             new["max_qp"] = jnp.maximum(state["max_qp"], jnp.max(fsz))
+        if instrument:
+            new["stats"] = obs.stats_record(
+                state["stats"], state["rounds"],
+                r_frontier=jnp.sum(frontier),
+                r_edges=jnp.sum(probes))
         return new
 
     init = dict(
@@ -73,20 +83,26 @@ def ac3_kernel(indptr, indices, worker_ids, workers: int, active=None, *,
     if counters:
         init["per_worker"] = jnp.zeros((workers,), jnp.int32)
         init["max_qp"] = jnp.array(0, jnp.int32)
+    if instrument:
+        init["stats"] = obs.stats_init(max_rounds,
+                                       ("r_frontier", "r_edges"))
     out = jax.lax.while_loop(cond, body, init)
     return (out["status"], out["rounds"],
             out["per_worker"] if counters else None,
             out["max_qp"] if counters else None,
-            out["deaths_rounds"])
+            out["deaths_rounds"],
+            out["stats"] if instrument else None)
 
 
 def _run_ac3(graph_arrays, transpose_arrays, worker_ids, workers, active, *,
-             probe, window, use_kernel, counters):
+             probe, window, use_kernel, counters, instrument=False,
+             max_rounds=0):
     indptr, indices = graph_arrays
-    status, rounds, pw, max_qp, _ = ac3_kernel(
+    status, rounds, pw, max_qp, _, stats = ac3_kernel(
         indptr, indices, worker_ids, workers, active=active, probe=probe,
-        window=window, use_kernel=use_kernel, counters=counters)
-    return status, rounds, pw, max_qp
+        window=window, use_kernel=use_kernel, counters=counters,
+        instrument=instrument, max_rounds=max_rounds)
+    return status, rounds, pw, max_qp, stats
 
 
 register_kernel(KernelSpec(

@@ -22,19 +22,28 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from .. import obs
 from .common import per_worker_add, worker_counts
 from .registry import KernelSpec, register_kernel
 
+_STAT_NAMES = ("r_frontier", "r_edges", "r_decrements")
 
-@partial(jax.jit, static_argnames=("workers", "count_init_scan", "counters"))
+
+@partial(jax.jit, static_argnames=("workers", "count_init_scan", "counters",
+                                   "instrument", "max_rounds"))
 def ac4_kernel(indptr, indices, t_indptr, t_indices, t_rows, worker_ids,
                workers: int, count_init_scan: bool, active=None, *,
-               counters: bool = True):
+               counters: bool = True, instrument: bool = False,
+               max_rounds: int = 0):
     """t_rows: (mT,) source vertex (the dead propagator w) of each Gᵀ edge.
 
     ``active``: optional (n,) bool — trim the induced subgraph.
     ``counters=False`` skips per-worker counter accumulation (the serving
     fast path) and returns ``None`` in the counter slots.
+    ``instrument=True`` (DESIGN.md §11) threads static-shape ``(max_rounds,)``
+    round buffers through the carry — frontier size, traversed edges, and
+    counter decrements applied to live vertices per round — returned as the
+    fifth output (``None`` when off, so the stats compile out entirely).
     """
     n = indptr.shape[0] - 1
     deg_out = indptr[1:] - indptr[:-1]
@@ -84,6 +93,14 @@ def ac4_kernel(indptr, indices, t_indptr, t_indices, t_rows, worker_ids,
             fsz = worker_counts(newly, worker_ids, workers)
             new["per_worker"] = pw
             new["max_qp"] = jnp.maximum(state["max_qp"], jnp.max(fsz))
+        if instrument:
+            # round r processes the frontier that died in round r-1 (round 0
+            # processes frontier0); edges = Σ_{w∈frontier} indeg(w) = Σ dec
+            new["stats"] = obs.stats_record(
+                state["stats"], state["rounds"],
+                r_frontier=jnp.sum(frontier),
+                r_edges=jnp.sum(jnp.where(frontier, deg_in, 0)),
+                r_decrements=jnp.sum(jnp.where(state["status"], dec, 0)))
         return new
 
     init = dict(
@@ -96,20 +113,29 @@ def ac4_kernel(indptr, indices, t_indptr, t_indices, t_rows, worker_ids,
         fsz0 = worker_counts(frontier0, worker_ids, workers)
         init["per_worker"] = per_worker0
         init["max_qp"] = jnp.max(fsz0)
+    if instrument:
+        stats0 = obs.stats_init(max_rounds, _STAT_NAMES)
+        if count_init_scan:  # the AC4 degree-counting scan is round-0 work
+            stats0 = obs.stats_record(stats0, jnp.int32(0),
+                                      r_edges=jnp.sum(deg_out))
+        init["stats"] = stats0
     out = jax.lax.while_loop(cond, body, init)
     return (out["status"], out["rounds"],
             out["per_worker"] if counters else None,
-            out["max_qp"] if counters else None)
+            out["max_qp"] if counters else None,
+            out["stats"] if instrument else None)
 
 
 def _run_ac4(graph_arrays, transpose_arrays, worker_ids, workers, active, *,
-             probe, window, use_kernel, counters, count_init_scan):
+             probe, window, use_kernel, counters, count_init_scan,
+             instrument=False, max_rounds=0):
     del probe, window, use_kernel  # AC-4 never probes (counter-based)
     indptr, indices = graph_arrays
     t_indptr, t_indices, t_rows = transpose_arrays
     return ac4_kernel(
         indptr, indices, t_indptr, t_indices, t_rows, worker_ids, workers,
-        count_init_scan=count_init_scan, active=active, counters=counters)
+        count_init_scan=count_init_scan, active=active, counters=counters,
+        instrument=instrument, max_rounds=max_rounds)
 
 
 register_kernel(KernelSpec(

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from .. import obs
 from .common import probe_first_live
 from .graph import CSRGraph, TrimResult
 
@@ -95,11 +96,18 @@ def _unpack_bits(packed):
     return (((packed[:, None] >> shifts) & 1) > 0).reshape(-1)
 
 
-def _ac6_body_packed(axis):
+def _ac6_body_packed(axis, instrument: bool = False, max_rounds: int = 0):
     """§Perf variant: the per-round status all_gather exchanges a packed
     uint32 bitmap (n/8 bytes) instead of a bool array (n bytes) — an 8×
     collective-traffic cut for the paper's technique at pod scale.
-    Requires n/P divisible by 32 (pad_to=32 in build_partition)."""
+    Requires n/P divisible by 32 (pad_to=32 in build_partition).
+
+    ``instrument`` (DESIGN.md §11): every body maker here optionally
+    threads per-SHARD ``(max_rounds,)`` round buffers — deaths and
+    traversed edges this shard did per round — through the carry,
+    returning them as two extra ``(1, R)`` sharded outputs (the engine
+    stacks them to ``(P, R)``: per-worker per-round stats, the quantity
+    the paper's imbalance experiments plot)."""
     def run(lip, lix, act):
         lip, lix, act = lip[0], lix[0], act[0]
         nl = lip.shape[0] - 1
@@ -123,13 +131,18 @@ def _ac6_body_packed(axis):
             supp = lix[jnp.clip(lip[:-1] + ptr, 0, max(ml - 1, 0))]
             affected = status_l & ~status_gn[supp] & (deg > 0)
             go = jax.lax.pmax(jnp.any(affected), axis)
-            return _mark_varying(dict(
+            new = dict(
                 status_l=status_l, status_pg=status_pg, ptr=ptr,
                 affected=affected, go=go, rounds=s["rounds"] + 1,
                 edges=s["edges"] + jnp.sum(probes),
                 max_qp=jnp.maximum(s["max_qp"],
-                                   jnp.sum(frontier.astype(jnp.int32)))),
-                axis)
+                                   jnp.sum(frontier.astype(jnp.int32))))
+            if instrument:
+                new["stats"] = obs.stats_record(
+                    s["stats"], s["rounds"],
+                    r_frontier=jnp.sum(frontier),
+                    r_edges=jnp.sum(probes))
+            return _mark_varying(new, axis)
 
         init = dict(status_l=act,
                     status_pg=jax.lax.all_gather(_pack_bits(act), axis,
@@ -140,13 +153,20 @@ def _ac6_body_packed(axis):
                     rounds=jnp.array(0, jnp.int32),
                     edges=jnp.array(0, jnp.int32),
                     max_qp=jnp.array(0, jnp.int32))
+        if instrument:
+            init["stats"] = obs.stats_init(max_rounds,
+                                           ("r_frontier", "r_edges"))
         out = jax.lax.while_loop(cond, body, _mark_varying(init, axis))
-        return (out["status_l"][None], out["edges"][None],
-                out["rounds"][None], out["max_qp"][None])
+        res = (out["status_l"][None], out["edges"][None],
+               out["rounds"][None], out["max_qp"][None])
+        if instrument:
+            res += (out["stats"]["r_frontier"][None],
+                    out["stats"]["r_edges"][None])
+        return res
     return run
 
 
-def _ac6_body(axis):
+def _ac6_body(axis, instrument: bool = False, max_rounds: int = 0):
     def run(lip, lix, act):
         lip, lix, act = lip[0], lix[0], act[0]
         nl = lip.shape[0] - 1
@@ -168,13 +188,19 @@ def _ac6_body(axis):
             supp = lix[jnp.clip(lip[:-1] + ptr, 0, max(ml - 1, 0))]
             affected = status_l & ~status_g[supp] & (deg > 0)
             go = jax.lax.pmax(jnp.any(affected), axis)
-            return _mark_varying(dict(
+            new = dict(
                 status_l=status_l, status_g=status_g, ptr=ptr,
                 affected=affected, go=go,
                 rounds=s["rounds"] + 1,
                 edges=s["edges"] + jnp.sum(probes),
                 max_qp=jnp.maximum(s["max_qp"],
-                                   jnp.sum(frontier.astype(jnp.int32)))), axis)
+                                   jnp.sum(frontier.astype(jnp.int32))))
+            if instrument:
+                new["stats"] = obs.stats_record(
+                    s["stats"], s["rounds"],
+                    r_frontier=jnp.sum(frontier),
+                    r_edges=jnp.sum(probes))
+            return _mark_varying(new, axis)
 
         init = dict(status_l=act,
                     status_g=jax.lax.all_gather(act, axis, tiled=True),
@@ -184,13 +210,20 @@ def _ac6_body(axis):
                     rounds=jnp.array(0, jnp.int32),
                     edges=jnp.array(0, jnp.int32),
                     max_qp=jnp.array(0, jnp.int32))
+        if instrument:
+            init["stats"] = obs.stats_init(max_rounds,
+                                           ("r_frontier", "r_edges"))
         out = jax.lax.while_loop(cond, body, _mark_varying(init, axis))
-        return (out["status_l"][None], out["edges"][None],
-                out["rounds"][None], out["max_qp"][None])
+        res = (out["status_l"][None], out["edges"][None],
+               out["rounds"][None], out["max_qp"][None])
+        if instrument:
+            res += (out["stats"]["r_frontier"][None],
+                    out["stats"]["r_edges"][None])
+        return res
     return run
 
 
-def _ac3_body(axis):
+def _ac3_body(axis, instrument: bool = False, max_rounds: int = 0):
     def run(lip, lix, act):
         lip, lix, act = lip[0], lix[0], act[0]
         nl = lip.shape[0] - 1
@@ -208,12 +241,18 @@ def _ac3_body(axis):
             ptr = jnp.where(s["status_l"], jnp.where(found, pos, deg), s["ptr"])
             status_g = jax.lax.all_gather(status_l, axis, tiled=True)
             go = jax.lax.pmax(jnp.any(frontier), axis)
-            return _mark_varying(dict(
+            new = dict(
                 status_l=status_l, status_g=status_g, ptr=ptr,
                 go=go, rounds=s["rounds"] + 1,
                 edges=s["edges"] + jnp.sum(probes),
                 max_qp=jnp.maximum(s["max_qp"],
-                                   jnp.sum(frontier.astype(jnp.int32)))), axis)
+                                   jnp.sum(frontier.astype(jnp.int32))))
+            if instrument:
+                new["stats"] = obs.stats_record(
+                    s["stats"], s["rounds"],
+                    r_frontier=jnp.sum(frontier),
+                    r_edges=jnp.sum(probes))
+            return _mark_varying(new, axis)
 
         init = dict(status_l=act,
                     status_g=jax.lax.all_gather(act, axis, tiled=True),
@@ -222,13 +261,21 @@ def _ac3_body(axis):
                     rounds=jnp.array(0, jnp.int32),
                     edges=jnp.array(0, jnp.int32),
                     max_qp=jnp.array(0, jnp.int32))
+        if instrument:
+            init["stats"] = obs.stats_init(max_rounds,
+                                           ("r_frontier", "r_edges"))
         out = jax.lax.while_loop(cond, body, _mark_varying(init, axis))
-        return (out["status_l"][None], out["edges"][None],
-                out["rounds"][None], out["max_qp"][None])
+        res = (out["status_l"][None], out["edges"][None],
+               out["rounds"][None], out["max_qp"][None])
+        if instrument:
+            res += (out["stats"]["r_frontier"][None],
+                    out["stats"]["r_edges"][None])
+        return res
     return run
 
 
-def build_ac4_sharded(graph: CSRGraph, num: int, axis):
+def build_ac4_sharded(graph: CSRGraph, num: int, axis,
+                      instrument: bool = False, max_rounds: int = 0):
     """AC-4's sharded state: Gᵀ partition + out-degree counters, built once.
 
     Returns ``(operands, n_pad, body)`` where ``operands`` are the three
@@ -272,12 +319,19 @@ def build_ac4_sharded(graph: CSRGraph, num: int, axis):
             newly = s["status_l"] & (counters <= 0)
             status_l = s["status_l"] & ~newly
             go = jax.lax.pmax(jnp.any(newly), axis)
-            edges = s["edges"] + jnp.sum(jnp.where(frontier, deg_in, 0))
-            return _mark_varying(dict(
+            round_edges = jnp.sum(jnp.where(frontier, deg_in, 0))
+            new = dict(
                 status_l=status_l, counters=counters, frontier=newly,
-                go=go, rounds=s["rounds"] + 1, edges=edges,
+                go=go, rounds=s["rounds"] + 1,
+                edges=s["edges"] + round_edges,
                 max_qp=jnp.maximum(s["max_qp"],
-                                   jnp.sum(newly.astype(jnp.int32)))), axis)
+                                   jnp.sum(newly.astype(jnp.int32))))
+            if instrument:
+                new["stats"] = obs.stats_record(
+                    s["stats"], s["rounds"],
+                    r_frontier=jnp.sum(frontier),
+                    r_edges=round_edges)
+            return _mark_varying(new, axis)
 
         init = dict(status_l=status0, counters=deg_out_l.astype(jnp.int32),
                     frontier=frontier0,
@@ -285,9 +339,16 @@ def build_ac4_sharded(graph: CSRGraph, num: int, axis):
                     rounds=jnp.array(0, jnp.int32),
                     edges=jnp.array(0, jnp.int32),
                     max_qp=jnp.sum(frontier0.astype(jnp.int32)))
+        if instrument:
+            init["stats"] = obs.stats_init(max_rounds,
+                                           ("r_frontier", "r_edges"))
         out = jax.lax.while_loop(cond, body, _mark_varying(init, axis))
-        return (out["status_l"][None], out["edges"][None],
-                out["rounds"][None], out["max_qp"][None])
+        res = (out["status_l"][None], out["edges"][None],
+               out["rounds"][None], out["max_qp"][None])
+        if instrument:
+            res += (out["stats"]["r_frontier"][None],
+                    out["stats"]["r_edges"][None])
+        return res
 
     return (ltip, ltix, deg_out), n_pad, run
 

@@ -43,6 +43,7 @@ import functools
 
 import numpy as np
 
+from .. import obs
 from . import ac3 as _ac3  # noqa: F401  (imports register the kernels)
 from . import ac4 as _ac4  # noqa: F401
 from . import ac6 as _ac6  # noqa: F401
@@ -55,12 +56,16 @@ BACKENDS = ("dense", "windowed", "sharded")
 
 @functools.lru_cache(maxsize=None)
 def _local_runner(method: str, probe: str, window: int,
-                  use_kernel, counters: bool, workers: int, batched: bool):
+                  use_kernel, counters: bool, workers: int, batched: bool,
+                  instrument: bool = False, max_rounds: int = 0):
     """Shared jitted adapter for the dense/windowed backends.
 
     Cached process-wide on the static configuration so two engines over
     same-shaped graphs (e.g. the SCC driver's forward and backward passes —
     Gᵀ has exactly G's shape) share one compiled executable.
+    ``instrument``/``max_rounds`` select the stats-carrying kernel variant
+    (DESIGN.md §11); un-instrumented plans keep their own cache entries, so
+    turning instrumentation on elsewhere never retraces them.
     """
     import jax
 
@@ -70,7 +75,8 @@ def _local_runner(method: str, probe: str, window: int,
         _TRACE_COUNT[0] += 1  # runs at trace time only
         return spec.run((indptr, indices), tarrs, worker_ids, workers,
                         active, probe=probe, window=window,
-                        use_kernel=use_kernel, counters=counters)
+                        use_kernel=use_kernel, counters=counters,
+                        instrument=instrument, max_rounds=max_rounds)
 
     fn = call
     if batched:
@@ -82,7 +88,8 @@ def plan(graph: CSRGraph, method: str = "ac6", backend: str = "dense", *,
          workers: int = 1, chunk: int = 4096, window: int = 16,
          use_kernel: bool | None = None, transpose: CSRGraph | None = None,
          mesh=None, axis="workers", packed: bool = False,
-         unmasked: bool = False) -> "TrimEngine":
+         unmasked: bool = False, instrument: bool = False,
+         max_rounds: int | None = None) -> "TrimEngine":
     """Build a :class:`TrimEngine` for ``graph``.
 
     ``transpose`` pre-seeds the engine's Gᵀ cache (e.g. the SCC driver
@@ -94,19 +101,32 @@ def plan(graph: CSRGraph, method: str = "ac6", backend: str = "dense", *,
     ``active`` masks.  It is required for configurations that cannot trim
     induced subgraphs (sharded AC-4) — without it, ``plan()`` raises
     immediately rather than failing mid-worklist at ``run(active=...)``.
+
+    ``instrument=True`` (DESIGN.md §11) threads per-round stat buffers
+    through the fixpoint and attaches a :class:`~repro.obs.RoundStats` to
+    every result (``result.round_stats``).  The buffers have a *static*
+    round capacity — ``max_rounds`` pow2-padded, default
+    ``obs.round_capacity(n)`` — so instrumented plans still compile once;
+    runs exceeding it fold their tail rounds into the last slot (totals
+    stay exact).  ``instrument=False`` compiles the stats out entirely:
+    bit-identical results, zero extra dispatches, and the exact same
+    cached executable as a never-instrumented process.
     """
     return TrimEngine(graph, method=method, backend=backend, workers=workers,
                       chunk=chunk, window=window, use_kernel=use_kernel,
                       transpose=transpose, mesh=mesh, axis=axis,
-                      packed=packed, unmasked=unmasked)
+                      packed=packed, unmasked=unmasked, instrument=instrument,
+                      max_rounds=max_rounds)
 
 
 class TrimEngine(EngineBase):
     """Compile-once trimming over one graph.  Build with :func:`plan`."""
 
+    family = "trim"
+
     def __init__(self, graph, *, method, backend, workers, chunk, window,
                  use_kernel, transpose, mesh, axis, packed,
-                 unmasked=False):
+                 unmasked=False, instrument=False, max_rounds=None):
         self.spec = get_kernel(method)   # raises on unknown method
         if backend not in BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; expected one of "
@@ -143,9 +163,17 @@ class TrimEngine(EngineBase):
         self.axis = axis
         self.packed = packed
         self.unmasked = unmasked
+        self.instrument = instrument
+        self.max_rounds = (obs.round_capacity(graph.n, max_rounds)
+                           if instrument else 0)
         self._tarrs = None
         self._worker_ids = None
         self._shard = None
+
+    def plan_signature(self) -> str:
+        sig = (f"trim[{self.method}/{self.backend}]"
+               f"(n={self.graph.n},m={self.graph.m},w={self.workers})")
+        return sig + "+stats" if self.instrument else sig
 
     # -- cached resources --------------------------------------------------
     def _transpose_arrays(self):
@@ -194,20 +222,28 @@ class TrimEngine(EngineBase):
                else jnp.asarray(active, bool))
         fn = _local_runner(self.method, self._probe_kind(), self.window,
                            self.use_kernel, counters, self.workers,
-                           batched=False)
-        status, rounds, pw, max_qp = self._dispatch(
+                           batched=False, instrument=self.instrument,
+                           max_rounds=self.max_rounds)
+        status, rounds, pw, max_qp, stats = self._dispatch(
             fn, self.graph.indptr, self.graph.indices,
             self._transpose_arrays(), self._ids(), act)
+        rs = None
+        if self.instrument:
+            rs = obs.RoundStats(rounds, stats, per_worker=pw,
+                                max_rounds=self.max_rounds)
         return TrimResult(status=status.astype(jnp.int32), rounds=rounds,
-                          max_frontier=max_qp, per_worker_edges=pw)
+                          max_frontier=max_qp, per_worker_edges=pw,
+                          round_stats=rs)
 
     def run_batch_stacked(self, active_masks, counters: bool = True):
         """Trim B induced subgraphs in one vmapped dispatch, returning the
-        stacked device arrays directly as a 4-tuple
-        ``(status, per_worker_edges, rounds, max_frontier)``: (B, n) int32,
-        (B, P) int32, (B,) int32, (B,) int32 — the two counter entries are
-        ``None`` with ``counters=False``.  The batched SCC driver consumes
-        this form — it reduces across the batch on device, so per-row
+        stacked device arrays directly as a 5-tuple
+        ``(status, per_worker_edges, rounds, max_frontier, round_stats)``:
+        (B, n) int32, (B, P) int32, (B,) int32, (B,) int32, plus a dict of
+        (B, R) stat buffers — the two counter entries are ``None`` with
+        ``counters=False`` and the stats entry is ``None`` unless the plan
+        has ``instrument=True``.  The batched SCC driver consumes this form
+        — it reduces across the batch on device, so per-row
         :class:`TrimResult` views would only be sliced apart and
         immediately restacked.  Use :meth:`run_batch` for per-region
         results."""
@@ -230,14 +266,17 @@ class TrimEngine(EngineBase):
                     jnp.zeros((b, self.workers), jnp.int32)
                     if counters else None,
                     jnp.full((b,), 0 if n == 0 else 2, jnp.int32),
-                    masks.sum(axis=1, dtype=jnp.int32) if counters else None)
+                    masks.sum(axis=1, dtype=jnp.int32) if counters else None,
+                    self._degenerate_stats(masks) if self.instrument
+                    else None)
         fn = _local_runner(self.method, self._probe_kind(), self.window,
                            self.use_kernel, counters, self.workers,
-                           batched=True)
-        status, rounds, pw, max_qp = self._dispatch(
+                           batched=True, instrument=self.instrument,
+                           max_rounds=self.max_rounds)
+        status, rounds, pw, max_qp, stats = self._dispatch(
             fn, self.graph.indptr, self.graph.indices,
             self._transpose_arrays(), self._ids(), masks)
-        return status.astype(jnp.int32), pw, rounds, max_qp
+        return status.astype(jnp.int32), pw, rounds, max_qp, stats
 
     def run_batch(self, active_masks, counters: bool = True):
         """Trim B induced subgraphs in one vmapped dispatch.
@@ -246,12 +285,18 @@ class TrimEngine(EngineBase):
         :class:`TrimResult`, equal element-wise to sequential ``run()``
         calls (counters included).
         """
-        status, pw, rounds, max_qp = self.run_batch_stacked(
+        status, pw, rounds, max_qp, stats = self.run_batch_stacked(
             active_masks, counters=counters)
         return [TrimResult(status=status[i],
                            rounds=rounds[i],
                            max_frontier=None if max_qp is None else max_qp[i],
-                           per_worker_edges=None if pw is None else pw[i])
+                           per_worker_edges=None if pw is None else pw[i],
+                           round_stats=None if stats is None else
+                           obs.RoundStats(
+                               rounds[i],
+                               {k: v[i] for k, v in stats.items()},
+                               per_worker=None if pw is None else pw[i],
+                               max_rounds=self.max_rounds))
                 for i in range(status.shape[0])]
 
     def _probe_kind(self):
@@ -259,6 +304,26 @@ class TrimEngine(EngineBase):
                 and self.spec.supports_windowed else "dense")
 
     # -- degenerate paths (no kernel dispatch, still device-resident) ------
+    def _stat_names(self):
+        """Stat buffer names this plan's kernel would carry (counter-based
+        methods additionally track decrements)."""
+        return (("r_frontier", "r_edges", "r_decrements")
+                if self.method.startswith("ac4")
+                else ("r_frontier", "r_edges"))
+
+    def _degenerate_stats(self, masks):
+        """Round stats for the no-dispatch paths: every active vertex dies
+        in the first processed round (slot 0), zero edges traversed.
+        ``masks`` is (n,) or (B, n) bool; buffers come back (R,)/(B, R)."""
+        import jax.numpy as jnp
+        R = self.max_rounds
+        deaths = masks.sum(axis=-1, dtype=jnp.int32)[..., None]
+        pad = [(0, 0)] * (masks.ndim - 1) + [(0, R - 1)]
+        frontier = jnp.pad(deaths, pad)
+        zeros = jnp.zeros_like(frontier)
+        return {name: (frontier if name == "r_frontier" else zeros)
+                for name in self._stat_names()}
+
     def _degenerate(self, active, counters):
         """n == 0 or m == 0: the fixpoint is immediate, so no kernel runs —
         but the result is device-resident jnp with the same dtypes as the
@@ -268,22 +333,34 @@ class TrimEngine(EngineBase):
         npw = (self._num_shards() if self.backend == "sharded"
                else self.workers)
         pw = jnp.zeros((npw,), jnp.int32) if counters else None
+
+        def stats_for(act, rounds):
+            if not self.instrument:
+                return None
+            return obs.RoundStats(rounds, self._degenerate_stats(act),
+                                  per_worker=pw, max_rounds=self.max_rounds)
+
         if n == 0:
+            rounds = jnp.array(0, jnp.int32)
             return TrimResult(status=jnp.zeros((0,), jnp.int32),
-                              rounds=jnp.array(0, jnp.int32),
+                              rounds=rounds,
                               max_frontier=(jnp.array(0, jnp.int32)
                                             if counters else None),
-                              per_worker_edges=pw)
+                              per_worker_edges=pw,
+                              round_stats=stats_for(
+                                  jnp.zeros((0,), bool), rounds))
         # no edges: every (active) vertex is a sink and dies in round one;
         # rounds follows the AC-3 convention (α + 1): one killing round,
         # one confirming round -> α = 1
         act = (jnp.ones((n,), bool) if active is None
                else jnp.asarray(active, bool))
+        rounds = jnp.array(2, jnp.int32)
         return TrimResult(status=jnp.zeros((n,), jnp.int32),
-                          rounds=jnp.array(2, jnp.int32),
+                          rounds=rounds,
                           max_frontier=(act.sum(dtype=jnp.int32)
                                         if counters else None),
-                          per_worker_edges=pw)
+                          per_worker_edges=pw,
+                          round_stats=stats_for(act, rounds))
 
     # -- sharded backend ---------------------------------------------------
     def _num_shards(self):
@@ -308,8 +385,9 @@ class TrimEngine(EngineBase):
         num = dist._axis_size(mesh, axis)
         kind = self.spec.sharded_method
         if kind == "ac4":
-            operands, n_pad, body = dist.build_ac4_sharded(self.graph, num,
-                                                           axis)
+            operands, n_pad, body = dist.build_ac4_sharded(
+                self.graph, num, axis, instrument=self.instrument,
+                max_rounds=self.max_rounds)
             nspecs = 3
         else:
             lip, lix, n_pad = dist.build_partition(self.graph, num)
@@ -317,10 +395,12 @@ class TrimEngine(EngineBase):
             maker = (dist._ac6_body_packed if kind == "ac6" and self.packed
                      else {"ac3": dist._ac3_body,
                            "ac6": dist._ac6_body}[kind])
-            body = maker(axis)
+            body = maker(axis, instrument=self.instrument,
+                         max_rounds=self.max_rounds)
             nspecs = 3  # (lip, lix, act)
         smapped = dist.shard_map_compat(
-            body, mesh, in_specs=nspecs, out_specs=4, axis=axis)
+            body, mesh, in_specs=nspecs,
+            out_specs=6 if self.instrument else 4, axis=axis)
 
         def call(*arrs):
             _TRACE_COUNT[0] += 1
@@ -344,12 +424,23 @@ class TrimEngine(EngineBase):
             act[:n] = (True if active is None
                        else np.asarray(active, bool))
             args = (*sh["operands"], jnp.asarray(act.reshape(num, -1)))
-        status_l, edges, rounds, max_qp = self._dispatch(sh["fn"], *args)
+        out = self._dispatch(sh["fn"], *args)
+        status_l, edges, rounds, max_qp = out[:4]
         status = status_l.reshape(-1)[:n].astype(jnp.int32)
+        rs = None
+        if self.instrument:
+            # out[4:] are the (P, R) per-shard round buffers — per-worker
+            # per-round stats, exactly the paper's work-skew quantity
+            rs = obs.RoundStats(
+                jnp.max(rounds),
+                {"r_frontier": out[4], "r_edges": out[5]},
+                per_worker=edges.reshape(-1),
+                max_rounds=self.max_rounds)
         return TrimResult(
             status=status, rounds=jnp.max(rounds),
             max_frontier=jnp.max(max_qp) if counters else None,
-            per_worker_edges=edges.reshape(-1) if counters else None)
+            per_worker_edges=edges.reshape(-1) if counters else None,
+            round_stats=rs)
 
 
 __all__ = ["plan", "TrimEngine", "BACKENDS", "available_methods"]

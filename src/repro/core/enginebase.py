@@ -21,9 +21,17 @@ device-resident results.  This module holds the plumbing they share:
   device dispatches the engine issued (degenerate host shortcuts do not
   count); the batched SCC driver's per-generation contract — one trim
   dispatch, two reach dispatches — is asserted against it (DESIGN.md §8).
+
+Every dispatch is additionally wrapped in an ``obs`` span (DESIGN.md
+§11): engine family, plan signature, wall time, and compile-vs-execute
+attribution (``phase="compile+execute"`` when the dispatch caused one or
+more kernel traces).  The global recorder is disabled by default, in
+which case the span context is a no-op — un-observed runs pay a single
+attribute read per dispatch.
 """
 from __future__ import annotations
 
+from .. import obs
 from .graph import CSRGraph
 
 # Process-wide count of kernel traces (bumped from inside traced functions,
@@ -40,12 +48,20 @@ class EngineBase:
     needs.
     """
 
+    #: engine family name for span attribution; subclasses override
+    family = "engine"
+
     def __init__(self, graph: CSRGraph, *, transpose: CSRGraph | None = None):
         self.graph = graph
         self._transpose = transpose
         self._transpose_builds = 0
         self._traces = 0
         self._dispatches = 0
+
+    def plan_signature(self) -> str:
+        """Stable short description of the plan's static configuration,
+        used to label spans.  Subclasses refine it."""
+        return f"{self.family}(n={self.graph.n},m={self.graph.m})"
 
     # -- cached resources --------------------------------------------------
     @property
@@ -75,10 +91,19 @@ class EngineBase:
 
     def _dispatch(self, fn, *args):
         """Call a jitted runner, attributing trace deltas and counting the
-        dispatch."""
+        dispatch.  Each dispatch is one ``obs`` span (no-op context when
+        the global recorder is disabled)."""
         before = _TRACE_COUNT[0]
-        out = fn(*args)
-        self._traces += _TRACE_COUNT[0] - before
+        with obs.span("dispatch", cat="engine", family=self.family,
+                      plan=self.plan_signature(),
+                      seq=self._dispatches) as sp:
+            out = fn(*args)
+            delta = _TRACE_COUNT[0] - before
+            if sp is not None:
+                sp.attrs["traces"] = delta
+                sp.attrs["phase"] = ("compile+execute" if delta
+                                     else "execute")
+        self._traces += delta
         self._dispatches += 1
         return out
 

@@ -153,17 +153,23 @@ class TrimResult:
                    partitions of P workers (paper Fig.4/Table 8 analogue);
                    None unless counters were requested (``counters=True``,
                    the default)
+    round_stats:   :class:`repro.obs.RoundStats` with the per-round stat
+                   buffers (frontier size, traversed edges, ...); None
+                   unless the plan had ``instrument=True`` (DESIGN.md §11)
     """
 
-    __slots__ = ("_status", "_rounds", "_edges", "_max_frontier", "_pw")
+    __slots__ = ("_status", "_rounds", "_edges", "_max_frontier", "_pw",
+                 "_round_stats")
 
     def __init__(self, status, rounds, edges_traversed=None,
-                 max_frontier=None, per_worker_edges=None):
+                 max_frontier=None, per_worker_edges=None,
+                 round_stats=None):
         self._status = status
         self._rounds = rounds
         self._edges = edges_traversed
         self._max_frontier = max_frontier
         self._pw = per_worker_edges
+        self._round_stats = round_stats
 
     # -- lazy host materialization ----------------------------------------
     @property
@@ -206,6 +212,12 @@ class TrimResult:
         batched SCC driver reduces these on device and transfers one
         scalar per generation instead of one array per region."""
         return self._pw
+
+    @property
+    def round_stats(self):
+        """Per-round fixpoint stats (``None`` unless the producing plan
+        had ``instrument=True``)."""
+        return self._round_stats
 
     def materialize(self) -> "TrimResult":
         """Force every field to the host (numpy status, python ints)."""

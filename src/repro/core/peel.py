@@ -50,17 +50,21 @@ import functools
 
 import numpy as np
 
+from .. import obs
 from .enginebase import _TRACE_COUNT, EngineBase
 from .graph import CSRGraph, row_ids
 from .registry import KernelSpec, get_kernel, register_kernel
 
 _INT32_MAX = np.iinfo(np.int32).max
 
+_STAT_NAMES = ("r_frontier", "r_edges", "r_k")
+
 
 # -- the kernel (family "peel") ------------------------------------------------
 
 def peel_bucket_kernel(indptr, indices, t_indptr, t_indices, t_rows,
-                       active, *, k_stop, use_kernel):
+                       active, *, k_stop, use_kernel,
+                       instrument: bool = False, max_rounds: int = 0):
     """Bucketed out-degree peeling to the coreness fixpoint.
 
     ``active``: (n,) bool — peel the induced subgraph (inactive vertices
@@ -73,6 +77,12 @@ def peel_bucket_kernel(indptr, indices, t_indptr, t_indices, t_rows,
     (survivors of a bounded run get ``k_stop``; inactive get -1),
     (n,) int32 round at which each vertex peeled (-1 for survivors and
     inactive), and the scalar round count.
+
+    ``instrument`` (DESIGN.md §11) appends a fourth output: per-round
+    ``(max_rounds,)`` buffers of frontier size, Gᵀ edges traversed by the
+    bulk decrement, and the bucket level ``k`` peeled that round (``r_k``
+    is a per-slot value, not an accumulation — meaningful only for runs
+    within the round capacity).
     """
     import jax
     import jax.numpy as jnp
@@ -99,7 +109,7 @@ def peel_bucket_kernel(indptr, indices, t_indptr, t_indices, t_rows,
                                     use_kernel=use_kernel)
         dec = jax.ops.segment_sum(frontier[t_rows].astype(jnp.int32),
                                   t_indices, num_segments=n)
-        return dict(
+        new = dict(
             alive=alive & ~frontier,
             counters=counters - dec,
             coreness=jnp.where(frontier, k, s["coreness"]),
@@ -107,28 +117,44 @@ def peel_bucket_kernel(indptr, indices, t_indptr, t_indices, t_rows,
             k=k,
             rounds=s["rounds"] + 1,
         )
+        if instrument:
+            new["stats"] = obs.stats_record(
+                s["stats"], s["rounds"],
+                r_frontier=jnp.sum(frontier),
+                r_edges=jnp.sum(dec),
+                r_k=k)
+        return new
 
-    out = jax.lax.while_loop(cond, body, dict(
+    init = dict(
         alive=active,
         counters=deg.astype(jnp.int32),
         coreness=jnp.full((n,), -1, jnp.int32),
         peel_round=jnp.full((n,), -1, jnp.int32),
         k=jnp.array(0, jnp.int32),
         rounds=jnp.array(0, jnp.int32),
-    ))
+    )
+    if instrument:
+        # the counter-initialization scan (one pass over every induced
+        # edge, the AC-4 init) is round-0 work
+        stats0 = obs.stats_init(max_rounds, _STAT_NAMES)
+        init["stats"] = obs.stats_record(stats0, jnp.int32(0),
+                                         r_edges=jnp.sum(deg))
+    out = jax.lax.while_loop(cond, body, init)
     coreness = out["coreness"]
     if k_stop is not None:
         # survivors of a bounded run are exactly the k_stop-core
         coreness = jnp.where(out["alive"], jnp.int32(k_stop), coreness)
-    return coreness, out["peel_round"], out["rounds"]
+    return (coreness, out["peel_round"], out["rounds"],
+            out["stats"] if instrument else None)
 
 
 def _run_bucket(graph_arrays, transpose_arrays, active, *, k_stop,
-                use_kernel):
+                use_kernel, instrument=False, max_rounds=0):
     indptr, indices = graph_arrays
     t_indptr, t_indices, t_rows = transpose_arrays
     return peel_bucket_kernel(indptr, indices, t_indptr, t_indices, t_rows,
-                              active, k_stop=k_stop, use_kernel=use_kernel)
+                              active, k_stop=k_stop, use_kernel=use_kernel,
+                              instrument=instrument, max_rounds=max_rounds)
 
 
 register_kernel(KernelSpec(name="bucket", run=_run_bucket,
@@ -136,10 +162,12 @@ register_kernel(KernelSpec(name="bucket", run=_run_bucket,
 
 
 @functools.lru_cache(maxsize=None)
-def _peel_runner(method: str, k_stop, use_kernel, batched: bool):
+def _peel_runner(method: str, k_stop, use_kernel, batched: bool,
+                 instrument: bool = False, max_rounds: int = 0):
     """Shared jitted adapter, cached process-wide on the static
     configuration (DESIGN.md §1); each distinct ``k`` bound is its own
-    compiled variant (the early-exit condition is static)."""
+    compiled variant (the early-exit condition is static).
+    ``instrument``/``max_rounds`` select the stats-carrying variant."""
     import jax
 
     spec = get_kernel(method, family="peel")
@@ -147,7 +175,8 @@ def _peel_runner(method: str, k_stop, use_kernel, batched: bool):
     def call(garrs, tarrs, active):
         _TRACE_COUNT[0] += 1  # runs at trace time only
         return spec.run(garrs, tarrs, active, k_stop=k_stop,
-                        use_kernel=use_kernel)
+                        use_kernel=use_kernel, instrument=instrument,
+                        max_rounds=max_rounds)
 
     fn = call
     if batched:
@@ -170,19 +199,29 @@ class PeelResult:
                 vertices.
     rounds:     fixpoint rounds executed (scalar / (B,)); transfers to
                 the host on first access and is cached.
+    round_stats: per-round :class:`repro.obs.RoundStats` (frontier size,
+                Gᵀ edges traversed, bucket level); None unless the plan
+                had ``instrument=True``.
     """
 
-    __slots__ = ("_coreness", "_peel_round", "_rounds", "_k_stop")
+    __slots__ = ("_coreness", "_peel_round", "_rounds", "_k_stop",
+                 "_round_stats")
 
-    def __init__(self, coreness, peel_round, rounds, k_stop=None):
+    def __init__(self, coreness, peel_round, rounds, k_stop=None,
+                 round_stats=None):
         self._coreness = coreness
         self._peel_round = peel_round
         self._rounds = rounds
         self._k_stop = k_stop
+        self._round_stats = round_stats
 
     @property
     def coreness(self):
         return self._coreness
+
+    @property
+    def round_stats(self):
+        return self._round_stats
 
     @property
     def peel_round(self):
@@ -262,29 +301,47 @@ class PeelResult:
 
 def plan_peel(graph: CSRGraph, method: str = "bucket", *,
               use_kernel: bool | None = None,
-              transpose: CSRGraph | None = None) -> "PeelEngine":
+              transpose: CSRGraph | None = None, instrument: bool = False,
+              max_rounds: int | None = None) -> "PeelEngine":
     """Build a :class:`PeelEngine` for ``graph``.
 
     ``transpose`` pre-seeds the Gᵀ cache (shared with a
     :class:`~repro.core.engine.TrimEngine` over the same graph, whose
     AC-4 pass needs the identical arrays).  ``use_kernel`` forces the
     bucket-extraction Pallas kernel on/off (default: on iff a TPU is
-    attached, like every ``kernels.ops`` wrapper).
+    attached, like every ``kernels.ops`` wrapper).  ``instrument``
+    attaches per-round stats to every result (DESIGN.md §11; zero cost
+    when off).  Full-coreness peels can take up to n rounds — pass
+    ``max_rounds`` to widen the stat buffers past the 1024-slot default
+    if the per-round breakdown of a deep peel matters (totals are exact
+    either way).
     """
     return PeelEngine(graph, method=method, use_kernel=use_kernel,
-                      transpose=transpose)
+                      transpose=transpose, instrument=instrument,
+                      max_rounds=max_rounds)
 
 
 class PeelEngine(EngineBase):
     """Compile-once k-core peeling over one graph.  Build with
     :func:`plan_peel`."""
 
-    def __init__(self, graph, *, method, use_kernel, transpose):
+    family = "peel"
+
+    def __init__(self, graph, *, method, use_kernel, transpose,
+                 instrument=False, max_rounds=None):
         self.spec = get_kernel(method, family="peel")  # raises on unknown
         super().__init__(graph, transpose=transpose)
         self.method = method
         self.use_kernel = use_kernel
+        self.instrument = instrument
+        self.max_rounds = (obs.round_capacity(graph.n, max_rounds)
+                           if instrument else 0)
         self._tarrs = None
+
+    def plan_signature(self) -> str:
+        sig = (f"peel[{self.method}]"
+               f"(n={self.graph.n},m={self.graph.m})")
+        return sig + "+stats" if self.instrument else sig
 
     # -- cached resources --------------------------------------------------
     def _transpose_arrays(self):
@@ -321,11 +378,14 @@ class PeelEngine(EngineBase):
                else jnp.asarray(active, bool))
         if n == 0 or m == 0:
             return self._degenerate(act, k, batched=False)
-        fn = _peel_runner(self.method, k, self.use_kernel, batched=False)
-        core, rnd, rounds = self._dispatch(
+        fn = _peel_runner(self.method, k, self.use_kernel, batched=False,
+                          instrument=self.instrument,
+                          max_rounds=self.max_rounds)
+        core, rnd, rounds, stats = self._dispatch(
             fn, (self.graph.indptr, self.graph.indices),
             self._transpose_arrays(), act)
-        return PeelResult(core, rnd, rounds, k_stop=k)
+        return PeelResult(core, rnd, rounds, k_stop=k,
+                          round_stats=self._wrap_stats(rounds, stats))
 
     def run_batch(self, active_masks, k: int | None = None) -> PeelResult:
         """Peel B induced subgraphs in one vmapped dispatch.
@@ -343,11 +403,19 @@ class PeelEngine(EngineBase):
                              f"{masks.shape}")
         if n == 0 or m == 0:
             return self._degenerate(masks, k, batched=True)
-        fn = _peel_runner(self.method, k, self.use_kernel, batched=True)
-        core, rnd, rounds = self._dispatch(
+        fn = _peel_runner(self.method, k, self.use_kernel, batched=True,
+                          instrument=self.instrument,
+                          max_rounds=self.max_rounds)
+        core, rnd, rounds, stats = self._dispatch(
             fn, (self.graph.indptr, self.graph.indices),
             self._transpose_arrays(), masks)
-        return PeelResult(core, rnd, rounds, k_stop=k)
+        return PeelResult(core, rnd, rounds, k_stop=k,
+                          round_stats=self._wrap_stats(rounds, stats))
+
+    def _wrap_stats(self, rounds, stats):
+        if not self.instrument:
+            return None
+        return obs.RoundStats(rounds, stats, max_rounds=self.max_rounds)
 
     # -- degenerate paths (no kernel dispatch, still device-resident) ------
     def _degenerate(self, act, k, *, batched):
@@ -361,12 +429,23 @@ class PeelEngine(EngineBase):
         if k == 0:
             rnd = jnp.full(act.shape, -1, jnp.int32)
             rounds = jnp.zeros(lead, jnp.int32)
+            peeled = jnp.zeros(lead + (1,), jnp.int32)
         else:
             rnd = jnp.where(act, jnp.int32(0), jnp.int32(-1))
             rounds = jnp.ones(lead, jnp.int32)
+            peeled = act.sum(axis=-1, dtype=jnp.int32)[..., None]
         if not batched:
             rounds = rounds.reshape(())
-        return PeelResult(core, rnd, rounds, k_stop=k)
+        rs = None
+        if self.instrument:
+            R = self.max_rounds
+            pad = [(0, 0)] * (peeled.ndim - 1) + [(0, R - 1)]
+            frontier = jnp.pad(peeled, pad)
+            zeros = jnp.zeros_like(frontier)
+            rs = obs.RoundStats(
+                rounds, {"r_frontier": frontier, "r_edges": zeros,
+                         "r_k": zeros}, max_rounds=R)
+        return PeelResult(core, rnd, rounds, k_stop=k, round_stats=rs)
 
 
 # -- host oracle ---------------------------------------------------------------

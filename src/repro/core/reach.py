@@ -43,43 +43,63 @@ import functools
 
 import numpy as np
 
+from .. import obs
 from .enginebase import _TRACE_COUNT, EngineBase
 from .graph import CSRGraph, row_ids
 from .registry import KernelSpec, get_kernel, register_kernel
 
 REACH_BACKENDS = ("dense", "windowed")
 
+_STAT_NAMES = ("r_frontier", "r_edges")
+
 
 # -- kernels (family "reach") --------------------------------------------------
 
-def reach_push_kernel(indptr, indices, edge_src, seeds, active):
+def reach_push_kernel(indptr, indices, edge_src, seeds, active, *,
+                      instrument: bool = False, max_rounds: int = 0):
     """Forward reachability by per-edge scatter (one dense O(m) pass per
-    BSP round).  ``rounds`` counts frontier expansions executed."""
+    BSP round).  ``rounds`` counts frontier expansions executed.
+
+    ``instrument`` (DESIGN.md §11) carries per-round ``(max_rounds,)``
+    buffers — frontier size and out-edges of the frontier per expansion —
+    returned as a third output (``None`` when off)."""
     import jax
     import jax.numpy as jnp
 
     n = indptr.shape[0] - 1
+    deg = indptr[1:] - indptr[:-1]
     visited0 = seeds & active
 
     def cond(state):
-        _, frontier, _ = state
-        return jnp.any(frontier)
+        return jnp.any(state["frontier"])
 
     def body(state):
-        visited, frontier, rounds = state
+        visited, frontier = state["visited"], state["frontier"]
         edge_hit = frontier[edge_src]                      # (m,) bool
         hit = jnp.zeros((n,), bool).at[indices].max(edge_hit)
         new = hit & active & ~visited
-        return visited | new, new, rounds + 1
+        out = dict(visited=visited | new, frontier=new,
+                   rounds=state["rounds"] + 1)
+        if instrument:
+            out["stats"] = obs.stats_record(
+                state["stats"], state["rounds"],
+                r_frontier=jnp.sum(frontier),
+                r_edges=jnp.sum(jnp.where(frontier, deg, 0)))
+        return out
 
-    visited, _, rounds = jax.lax.while_loop(
-        cond, body, (visited0, visited0, jnp.array(0, jnp.int32)))
-    return visited, rounds
+    init = dict(visited=visited0, frontier=visited0,
+                rounds=jnp.array(0, jnp.int32))
+    if instrument:
+        init["stats"] = obs.stats_init(max_rounds, _STAT_NAMES)
+    out = jax.lax.while_loop(cond, body, init)
+    return (out["visited"], out["rounds"],
+            out["stats"] if instrument else None)
 
 
 def reach_pull_kernel(t_indptr, t_indices, seeds, active, *,
                       window: int, use_kernel, batched: bool = False,
-                      overflow: bool = True):
+                      overflow: bool = True, instrument: bool = False,
+                      max_rounds: int = 0):
     """Forward reachability by pull over in-neighbors (Gᵀ).
 
     Two statically-chosen round bodies:
@@ -131,12 +151,12 @@ def reach_pull_kernel(t_indptr, t_indices, seeds, active, *,
         return (csum[t_indptr[1:]] - csum[t_indptr[:-1]]) > 0
 
     def cond(state):
-        _, frontier, _ = state
-        return jnp.any(frontier)
+        return jnp.any(state["frontier"])
 
     def body(state):
-        visited, frontier, rounds = state
+        visited, frontier = state["visited"], state["frontier"]
         pending = active & ~visited
+        edges = None
         if use_tile:
             flags = frontier[win_sources]                  # (n, W) bool
             hit_w = kops.frontier_expand(flags, valid, pending,
@@ -149,29 +169,53 @@ def reach_pull_kernel(t_indptr, t_indices, seeds, active, *,
                     jnp.any(rest), lambda f: rest & row_hits(f),
                     lambda _: jnp.zeros_like(rest), frontier)
                 new = hit_w | found_r
+                if instrument:
+                    # tile gathers min(deg, W) per pending vertex; the
+                    # gated whole-row continuation is an O(m) pass
+                    edges = (jnp.sum(jnp.where(
+                        pending, jnp.minimum(t_deg, window), 0))
+                        + jnp.where(jnp.any(rest), m, 0))
             else:
                 new = hit_w    # no vertex overflows the window: exact
+                if instrument:
+                    edges = jnp.sum(jnp.where(pending, t_deg, 0))
         else:
             new = pending & row_hits(frontier)
-        return visited | new, new, rounds + 1
+            if instrument:
+                edges = jnp.array(m, jnp.int32)  # whole-row OR: O(m) pass
+        out = dict(visited=visited | new, frontier=new,
+                   rounds=state["rounds"] + 1)
+        if instrument:
+            out["stats"] = obs.stats_record(
+                state["stats"], state["rounds"],
+                r_frontier=jnp.sum(frontier), r_edges=edges)
+        return out
 
-    visited, _, rounds = jax.lax.while_loop(
-        cond, body, (visited0, visited0, jnp.array(0, jnp.int32)))
-    return visited, rounds
+    init = dict(visited=visited0, frontier=visited0,
+                rounds=jnp.array(0, jnp.int32))
+    if instrument:
+        init["stats"] = obs.stats_init(max_rounds, _STAT_NAMES)
+    out = jax.lax.while_loop(cond, body, init)
+    return (out["visited"], out["rounds"],
+            out["stats"] if instrument else None)
 
 
 def _run_push(graph_arrays, transpose_arrays, seeds, active, *,
-              window, use_kernel, batched=False, overflow=False):
+              window, use_kernel, batched=False, overflow=False,
+              instrument=False, max_rounds=0):
     indptr, indices, edge_src = graph_arrays
-    return reach_push_kernel(indptr, indices, edge_src, seeds, active)
+    return reach_push_kernel(indptr, indices, edge_src, seeds, active,
+                             instrument=instrument, max_rounds=max_rounds)
 
 
 def _run_pull(graph_arrays, transpose_arrays, seeds, active, *,
-              window, use_kernel, batched=False, overflow=True):
+              window, use_kernel, batched=False, overflow=True,
+              instrument=False, max_rounds=0):
     t_indptr, t_indices = transpose_arrays
     return reach_pull_kernel(t_indptr, t_indices, seeds, active,
                              window=window, use_kernel=use_kernel,
-                             batched=batched, overflow=overflow)
+                             batched=batched, overflow=overflow,
+                             instrument=instrument, max_rounds=max_rounds)
 
 
 register_kernel(KernelSpec(name="push", run=_run_push,
@@ -185,12 +229,15 @@ register_kernel(KernelSpec(name="pull", run=_run_pull,
 
 @functools.lru_cache(maxsize=None)
 def _reach_runner(method: str, window: int, use_kernel, batched: bool,
-                  overflow: bool):
+                  overflow: bool, instrument: bool = False,
+                  max_rounds: int = 0):
     """Shared jitted adapter, cached process-wide on the static
     configuration (DESIGN.md §1): the SCC driver's FW engine (over G) and
     BW engine (over Gᵀ, same array shapes) share one compiled executable.
     ``overflow`` (any in-degree > window, a per-graph static fact) picks
     the pull method's round body — see :func:`reach_pull_kernel`.
+    ``instrument``/``max_rounds`` select the stats-carrying variant
+    (DESIGN.md §11); un-instrumented plans keep their own cache entries.
     """
     import jax
 
@@ -200,7 +247,8 @@ def _reach_runner(method: str, window: int, use_kernel, batched: bool,
         _TRACE_COUNT[0] += 1  # runs at trace time only
         return spec.run(garrs, tarrs, seeds, active, window=window,
                         use_kernel=use_kernel, batched=batched,
-                        overflow=overflow)
+                        overflow=overflow, instrument=instrument,
+                        max_rounds=max_rounds)
 
     fn = call
     if batched:
@@ -218,18 +266,25 @@ class ReachResult:
             (seeds included).  Stays wherever the producer left it.
     rounds: frontier expansions executed (scalar, or (B,) for a batch);
             transfers to the host on first access and is cached.
+    round_stats: per-round :class:`repro.obs.RoundStats` (frontier size,
+            edges examined); None unless the plan had ``instrument=True``.
     """
 
-    __slots__ = ("_mask", "_rounds", "_n_reached")
+    __slots__ = ("_mask", "_rounds", "_n_reached", "_round_stats")
 
-    def __init__(self, mask, rounds):
+    def __init__(self, mask, rounds, round_stats=None):
         self._mask = mask
         self._rounds = rounds
         self._n_reached = None
+        self._round_stats = round_stats
 
     @property
     def mask(self):
         return self._mask
+
+    @property
+    def round_stats(self):
+        return self._round_stats
 
     @property
     def rounds(self):
@@ -264,23 +319,29 @@ class ReachResult:
 
 def plan_reach(graph: CSRGraph, backend: str = "dense", *,
                window: int = 16, use_kernel: bool | None = None,
-               transpose: CSRGraph | None = None) -> "ReachEngine":
+               transpose: CSRGraph | None = None, instrument: bool = False,
+               max_rounds: int | None = None) -> "ReachEngine":
     """Build a :class:`ReachEngine` for ``graph``.
 
     ``backend``: "dense" (push scatter) or "windowed" (pull through the
     ``frontier_expand`` Pallas kernel).  ``transpose`` pre-seeds the Gᵀ
     cache (the SCC driver hands the trim engine's transpose over, so one
-    FW-BW worklist builds Gᵀ exactly once).
+    FW-BW worklist builds Gᵀ exactly once).  ``instrument`` attaches
+    per-round stats to every result (DESIGN.md §11; zero cost when off).
     """
     return ReachEngine(graph, backend=backend, window=window,
-                       use_kernel=use_kernel, transpose=transpose)
+                       use_kernel=use_kernel, transpose=transpose,
+                       instrument=instrument, max_rounds=max_rounds)
 
 
 class ReachEngine(EngineBase):
     """Compile-once reachability over one graph.  Build with
     :func:`plan_reach`."""
 
-    def __init__(self, graph, *, backend, window, use_kernel, transpose):
+    family = "reach"
+
+    def __init__(self, graph, *, backend, window, use_kernel, transpose,
+                 instrument=False, max_rounds=None):
         if backend not in REACH_BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; expected one of "
                              f"{REACH_BACKENDS}")
@@ -290,9 +351,17 @@ class ReachEngine(EngineBase):
         self.spec = get_kernel(self.method, family="reach")
         self.window = window
         self.use_kernel = use_kernel
+        self.instrument = instrument
+        self.max_rounds = (obs.round_capacity(graph.n, max_rounds)
+                           if instrument else 0)
         self._garrs = None
         self._tarrs = None
         self._overflow = None
+
+    def plan_signature(self) -> str:
+        sig = (f"reach[{self.method}/{self.backend}]"
+               f"(n={self.graph.n},m={self.graph.m})")
+        return sig + "+stats" if self.instrument else sig
 
     # -- cached arrays -----------------------------------------------------
     def _graph_arrays(self):
@@ -360,14 +429,18 @@ class ReachEngine(EngineBase):
         act = self._active_mask(active, (n,))
         if n == 0 or m == 0:
             # no edges: nothing propagates beyond the seeds themselves
-            return ReachResult(mask=seed_mask & act,
-                               rounds=jnp.array(0, jnp.int32))
+            rounds = jnp.array(0, jnp.int32)
+            return ReachResult(mask=seed_mask & act, rounds=rounds,
+                               round_stats=self._empty_stats(rounds))
         fn = _reach_runner(self.method, self.window, self.use_kernel,
-                           batched=False, overflow=self._has_overflow())
-        reached, rounds = self._dispatch(
+                           batched=False, overflow=self._has_overflow(),
+                           instrument=self.instrument,
+                           max_rounds=self.max_rounds)
+        reached, rounds, stats = self._dispatch(
             fn, self._graph_arrays(), self._transpose_arrays(),
             seed_mask, act)
-        return ReachResult(mask=reached, rounds=rounds)
+        return ReachResult(mask=reached, rounds=rounds,
+                           round_stats=self._wrap_stats(rounds, stats))
 
     def run_batch(self, seed_masks, active_masks=None) -> ReachResult:
         """B reachability queries in one vmapped dispatch.
@@ -385,13 +458,31 @@ class ReachEngine(EngineBase):
                              f"{seeds.shape}")
         act = self._active_mask(active_masks, (seeds.shape[0], n))
         if n == 0 or m == 0:
-            return ReachResult(mask=seeds & act,
-                               rounds=jnp.zeros((seeds.shape[0],), jnp.int32))
+            rounds = jnp.zeros((seeds.shape[0],), jnp.int32)
+            return ReachResult(mask=seeds & act, rounds=rounds,
+                               round_stats=self._empty_stats(
+                                   rounds, lanes=seeds.shape[0]))
         fn = _reach_runner(self.method, self.window, self.use_kernel,
-                           batched=True, overflow=self._has_overflow())
-        reached, rounds = self._dispatch(
+                           batched=True, overflow=self._has_overflow(),
+                           instrument=self.instrument,
+                           max_rounds=self.max_rounds)
+        reached, rounds, stats = self._dispatch(
             fn, self._graph_arrays(), self._transpose_arrays(), seeds, act)
-        return ReachResult(mask=reached, rounds=rounds)
+        return ReachResult(mask=reached, rounds=rounds,
+                           round_stats=self._wrap_stats(rounds, stats))
+
+    def _wrap_stats(self, rounds, stats):
+        if not self.instrument:
+            return None
+        return obs.RoundStats(rounds, stats, max_rounds=self.max_rounds)
+
+    def _empty_stats(self, rounds, lanes: int = 0):
+        if not self.instrument:
+            return None
+        return obs.RoundStats(
+            rounds, obs.stats_init(self.max_rounds, _STAT_NAMES,
+                                   lanes=lanes),
+            max_rounds=self.max_rounds)
 
 
 __all__ = ["plan_reach", "ReachEngine", "ReachResult", "REACH_BACKENDS",

@@ -16,22 +16,24 @@ engine layers resolve their kernels through one mechanism (DESIGN.md §3):
   (``core/stream.py``): ``"ac4"`` maintains the AC-4 support counters
   through the ``counter_scatter`` Pallas kernel and re-runs the fixpoint
   from the delta frontier.  Its ``run`` adapter takes
-  ``(transpose_arrays, overlay, state, updates, *, use_kernel, full)``
-  and returns ``(overlay, state, rounds, dirty)`` — see
+  ``(transpose_arrays, overlay, state, updates, *, use_kernel, full,
+  revivable, instrument, max_rounds)`` and returns
+  ``(overlay, state, rounds, dirty, stats)`` — see
   :func:`repro.core.stream._run_stream_ac4`.
 * family ``"peel"`` — bucketed k-core peeling on the AC-4 counter
   substrate (``core/peel.py``): ``"bucket"`` extracts each peel round's
   frontier through the ``bucket_peel`` Pallas kernel.  Its ``run``
   adapter takes ``(graph_arrays, transpose_arrays, active, *, k_stop,
-  use_kernel)`` and returns ``(coreness, peel_round, rounds)`` — see
+  use_kernel, instrument, max_rounds)`` and returns
+  ``(coreness, peel_round, rounds, stats)`` — see
   :func:`repro.core.peel.peel_bucket_kernel`.
 
 A trim spec's ``run`` adapter has one uniform signature so every method is
 interchangeable under ``jax.jit`` / ``jax.vmap``::
 
     run(graph_arrays, transpose_arrays, worker_ids, workers, active, *,
-        probe, window, use_kernel, counters)
-      -> (status, rounds, per_worker, max_qp)
+        probe, window, use_kernel, counters, instrument, max_rounds)
+      -> (status, rounds, per_worker, max_qp, stats)
 
 where ``graph_arrays = (indptr, indices)``, ``transpose_arrays`` is
 ``(t_indptr, t_indices, t_rows)`` for methods with ``needs_transpose``
@@ -41,12 +43,20 @@ where ``graph_arrays = (indptr, indices)``, ``transpose_arrays`` is
 A reach spec's ``run`` adapter (family ``"reach"``) is::
 
     run(graph_arrays, transpose_arrays, seeds, active, *,
-        window, use_kernel, batched)
-      -> (reached, rounds)
+        window, use_kernel, batched, overflow, instrument, max_rounds)
+      -> (reached, rounds, stats)
 
 with ``graph_arrays = (indptr, indices, edge_src)`` and
 ``transpose_arrays = (t_indptr, t_indices)`` (``None`` unless
 ``needs_transpose``).
+
+Across every family the static ``instrument`` flag follows the same
+contract (DESIGN.md §11): ``instrument=False`` (the default) returns
+``None`` in the ``stats`` slot and compiles to the identical jaxpr as the
+pre-telemetry kernels — zero extra work, bit-identical outputs — while
+``instrument=True`` threads per-round ``(max_rounds,)`` int32 stat
+buffers (``repro.obs.stats_init`` / ``stats_record``) through the
+fixpoint carry and returns them as the final output.
 """
 from __future__ import annotations
 

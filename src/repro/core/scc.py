@@ -48,6 +48,7 @@ import functools
 
 import numpy as np
 
+from .. import obs
 from .engine import plan
 from .graph import CSRGraph
 from .reach import plan_reach
@@ -135,7 +136,9 @@ def scc_decompose(graph: CSRGraph, use_trim: bool = True,
                   max_pivots: int = 1_000_000, trim_backend: str = "dense",
                   reach_backend: str = "windowed", window: int = 16,
                   counters: bool = False, max_batch: int = 1024,
-                  active=None, trim2: bool = True):
+                  active=None, trim2: bool = True, workers: int = 1,
+                  chunk: int = 4096, instrument: bool = False,
+                  max_rounds: int | None = None):
     """Return (labels, stats). labels: (n,) int64 component ids (dense).
 
     ``active`` restricts decomposition to an induced subgraph: only
@@ -177,6 +180,22 @@ def scc_decompose(graph: CSRGraph, use_trim: bool = True,
     the trim phase skip it entirely, so fully-trimmable graphs pay
     nothing.  ``stats`` gains ``trim2_removed`` (vertices), ``trim2_sccs``
     (labels assigned), and ``trim2_dispatches``.
+
+    ``workers`` partitions vertices over virtual workers inside the trim
+    kernels (the paper's per-worker accounting; ``chunk`` is the paper's
+    ``schedule(dynamic, 4096)`` chunk size — lower it below ``n/workers``
+    or the whole graph lands on worker 0); with ``counters=True`` the
+    driver additionally accumulates ``stats["per_worker_edges"]`` — an
+    int64 ``(workers,)`` vector of traversed edges per worker summed
+    over every trim pass, the quantity behind the paper's Fig. 4-style
+    load-balance comparison (``benchmarks/bench_obs.py``).
+
+    ``instrument=True`` plans all four engines with round-level telemetry
+    (DESIGN.md §11): ``stats["trim_rounds"]`` / ``stats["reach_rounds"]``
+    accumulate total fixpoint rounds, and each generation emits an
+    ``obs.span`` (cat ``"scc"``) with its region count when a recorder is
+    active, so one ``obs.recording()`` around the call yields the full
+    per-generation trace.
     """
     import jax.numpy as jnp
 
@@ -185,6 +204,10 @@ def scc_decompose(graph: CSRGraph, use_trim: bool = True,
              "pivots": 0, "trim_dispatches": 0, "reach_dispatches": 0,
              "trim2_removed": 0, "trim2_sccs": 0, "trim2_dispatches": 0,
              "trim_edges_traversed": 0 if counters else None,
+             "per_worker_edges": (np.zeros(workers, np.int64)
+                                  if counters else None),
+             "trim_rounds": 0 if instrument else None,
+             "reach_rounds": 0 if instrument else None,
              "engine_traces": 0, "transpose_builds": 1}
     if n == 0:
         return np.zeros(0, np.int64), stats
@@ -200,17 +223,22 @@ def scc_decompose(graph: CSRGraph, use_trim: bool = True,
     # its transpose cache pre-seeded with G itself
     if use_trim:
         fw_trim = plan(graph, method=trim_method, backend=trim_backend,
-                       window=window)
+                       window=window, workers=workers, chunk=chunk,
+                       instrument=instrument, max_rounds=max_rounds)
         gt = fw_trim.transpose           # the one and only build
         bw_trim = plan(gt, method=trim_method, backend=trim_backend,
-                       window=window, transpose=graph)
+                       window=window, transpose=graph, workers=workers,
+                       chunk=chunk, instrument=instrument,
+                       max_rounds=max_rounds)
     else:
         fw_trim = bw_trim = None
         gt = graph.transpose()
     fw_reach = plan_reach(graph, backend=reach_backend, window=window,
-                          transpose=gt)
+                          transpose=gt, instrument=instrument,
+                          max_rounds=max_rounds)
     bw_reach = plan_reach(gt, backend=reach_backend, window=window,
-                          transpose=graph)
+                          transpose=graph, instrument=instrument,
+                          max_rounds=max_rounds)
     if trim2:
         # G and Gᵀ edge arrays for the size-≤2 detector (device-resident,
         # shared across every generation); the Gᵀ pair reuses the one
@@ -233,6 +261,11 @@ def scc_decompose(graph: CSRGraph, use_trim: bool = True,
         n_regions = len(regions)
         live_host = _pad_pow2(np.stack(regions))          # (B, n), disjoint
         regions = []
+        # the span is opened/closed manually: the loop body has early
+        # `continue`s, and a `with` around 100 lines would bury them
+        gen_span = obs.span("generation", cat="scc",
+                            gen=stats["generations"], regions=n_regions)
+        gen_sp = gen_span.__enter__()
 
         if use_trim:
             # one batched dispatch (per max_batch chunk) trims every
@@ -246,13 +279,16 @@ def scc_decompose(graph: CSRGraph, use_trim: bool = True,
                      for c in _chunks(live_host, max_batch)]
             stats["trim_passes"] += n_regions
             if counters:
-                # reduce per region on device (int32, the kernels' own
-                # accumulator width), one (B,) transfer per generation,
-                # cross-region sum in int64 on the host
-                per_region = jnp.concatenate(
-                    [p[1].sum(axis=1) for p in parts])[:n_regions]
-                stats["trim_edges_traversed"] += int(
-                    np.asarray(per_region).sum(dtype=np.int64))
+                # one (B, workers) transfer per generation (int32, the
+                # kernels' own accumulator width); cross-region and
+                # cross-worker sums in int64 on the host
+                pw = np.asarray(jnp.concatenate(
+                    [p[1] for p in parts])[:n_regions]).astype(np.int64)
+                stats["trim_edges_traversed"] += int(pw.sum())
+                stats["per_worker_edges"] += pw.sum(axis=0)
+            if instrument:
+                stats["trim_rounds"] += int(np.asarray(jnp.concatenate(
+                    [p[2] for p in parts])[:n_regions]).sum())
             status = jnp.concatenate([p[0] for p in parts]) != 0
             live = jnp.asarray(live_host)
             dead = live & ~status
@@ -305,6 +341,7 @@ def scc_decompose(graph: CSRGraph, use_trim: bool = True,
 
         keep = np.nonzero(live_host.any(axis=1))[0]
         if keep.size == 0:
+            gen_span.__exit__(None, None, None)
             continue
         live_host = _pad_pow2(live_host[keep])
         B = keep.size                       # real regions; the rest is pad
@@ -313,6 +350,7 @@ def scc_decompose(graph: CSRGraph, use_trim: bool = True,
         pivots = live_host[:B].argmax(axis=1)
         stats["pivots"] += B
         if stats["pivots"] > max_pivots:
+            gen_span.__exit__(None, None, None)
             raise RuntimeError("scc_decompose: pivot budget exceeded")
         seeds = np.zeros_like(live_host)
         seeds[np.arange(B), pivots] = True
@@ -320,10 +358,13 @@ def scc_decompose(graph: CSRGraph, use_trim: bool = True,
         # all B pivots advance together: one vmapped dispatch per
         # direction (per max_batch chunk)
         def sweep(reach):
-            return jnp.concatenate(
-                [reach.run_batch(s, a).mask
-                 for s, a in zip(_chunks(seeds, max_batch),
-                                 _chunks(live_host, max_batch))])[:B]
+            outs = [reach.run_batch(s, a)
+                    for s, a in zip(_chunks(seeds, max_batch),
+                                    _chunks(live_host, max_batch))]
+            if instrument:
+                stats["reach_rounds"] += int(sum(
+                    np.asarray(o.rounds).sum() for o in outs))
+            return jnp.concatenate([o.mask for o in outs])[:B]
         fw = sweep(fw_reach)
         bw = sweep(bw_reach)
         live = jnp.asarray(live_host[:B])
@@ -336,6 +377,9 @@ def scc_decompose(graph: CSRGraph, use_trim: bool = True,
         children = np.asarray(jnp.concatenate(
             [fw & ~scc, bw & ~scc, live & ~fw & ~bw]))
         regions = [m for m in children if m.any()]
+        if gen_sp is not None:
+            gen_sp.attrs["pivots"] = B
+        gen_span.__exit__(None, None, None)
 
     labels = np.asarray(labels).astype(np.int64)   # the one materialization
     assert ((labels >= 0) | ~region0).all()

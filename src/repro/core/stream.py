@@ -48,6 +48,7 @@ import functools
 
 import numpy as np
 
+from .. import obs
 from .enginebase import _TRACE_COUNT, EngineBase
 from .graph import CSRGraph, DeltaCSR, TrimResult, _pow2, \
     _stable_counting_order, check_edge_ids
@@ -55,11 +56,14 @@ from .registry import KernelSpec, get_kernel, register_kernel
 
 STREAM_BACKENDS = ("dense",)
 
+_STAT_NAMES = ("r_frontier", "r_edges", "r_decrements")
+
 
 # -- the stream kernel (family "stream") ---------------------------------------
 
 def _run_stream_ac4(tarrs, overlay, state, updates, *, use_kernel,
-                    full: bool, revivable: bool = True):
+                    full: bool, revivable: bool = True,
+                    instrument: bool = False, max_rounds: int = 0):
     """One apply step: structural overlay updates + counter maintenance +
     (incremental or from-scratch) AC-4 fixpoint, all in one dispatch.
 
@@ -83,6 +87,13 @@ def _run_stream_ac4(tarrs, overlay, state, updates, *, use_kernel,
              from scratch when an inserted arc leaves a dead source).
              Deletion-only batches are monotone and compile the fallback
              — including its counter re-initialization — out entirely.
+    instrument: static — thread per-round fixpoint telemetry (processed
+             frontier size, live arcs traversed, counter decrements
+             applied to live vertices; DESIGN.md §11) through the loop
+             carry as ``(max_rounds,)`` int32 buffers.  ``False``
+             compiles the stats out entirely — the returned stats slot is
+             ``None`` and the jaxpr is identical to the uninstrumented
+             kernel.
     """
     import jax
     import jax.numpy as jnp
@@ -165,14 +176,32 @@ def _run_stream_ac4(tarrs, overlay, state, updates, *, use_kernel,
             num_segments=n)
         c = s["counters"] - dec
         newly_ = s["status"] & (c <= 0)
-        return dict(status=s["status"] & ~newly_, counters=c,
-                    frontier=newly_, rounds=s["rounds"] + 1)
+        new = dict(status=s["status"] & ~newly_, counters=c,
+                   frontier=newly_, rounds=s["rounds"] + 1)
+        if instrument:
+            new["stats"] = obs.stats_record(
+                s["stats"], s["rounds"],
+                r_frontier=jnp.sum(f),
+                r_edges=jnp.sum(dec),
+                r_decrements=jnp.sum(jnp.where(s["status"], dec, 0)))
+        return new
 
-    out = jax.lax.while_loop(cond, body, dict(
-        status=status0, counters=counters0, frontier=frontier0,
-        rounds=jnp.array(0, jnp.int32)))
+    state0 = dict(status=status0, counters=counters0, frontier=frontier0,
+                  rounds=jnp.array(0, jnp.int32))
+    if instrument:
+        # attribute the from-scratch counter re-initialization (a scan of
+        # every overlay arc) to round slot 0 when it actually ran
+        init_scan = jnp.array(t_rows.shape[0] + ins_alive.shape[0],
+                              jnp.int32)
+        if not full:
+            init_scan = jnp.where(dirty, init_scan, 0)
+        state0["stats"] = obs.stats_record(
+            obs.stats_init(max_rounds, _STAT_NAMES), jnp.int32(0),
+            r_edges=init_scan)
+    out = jax.lax.while_loop(cond, body, state0)
     return ((tomb, ins_src, ins_dst, ins_alive),
-            (out["status"], out["counters"]), out["rounds"], dirty)
+            (out["status"], out["counters"]), out["rounds"], dirty,
+            out["stats"] if instrument else None)
 
 
 register_kernel(KernelSpec(name="ac4", run=_run_stream_ac4,
@@ -180,7 +209,8 @@ register_kernel(KernelSpec(name="ac4", run=_run_stream_ac4,
 
 
 @functools.lru_cache(maxsize=None)
-def _stream_runner(method: str, use_kernel, full: bool, revivable: bool):
+def _stream_runner(method: str, use_kernel, full: bool, revivable: bool,
+                   instrument: bool = False, max_rounds: int = 0):
     """Jitted apply step, cached process-wide on the static configuration
     (per method: from-scratch, deletion-only, and with-insertions
     variants)."""
@@ -192,7 +222,8 @@ def _stream_runner(method: str, use_kernel, full: bool, revivable: bool):
         _TRACE_COUNT[0] += 1  # runs at trace time only
         return spec.run(tarrs, overlay, state, updates,
                         use_kernel=use_kernel, full=full,
-                        revivable=revivable)
+                        revivable=revivable, instrument=instrument,
+                        max_rounds=max_rounds)
 
     return jax.jit(call)
 
@@ -209,12 +240,13 @@ class StreamResult:
              from-scratch initialization (still one dispatch)
     """
 
-    __slots__ = ("_status", "_rounds", "_dirty")
+    __slots__ = ("_status", "_rounds", "_dirty", "_round_stats")
 
-    def __init__(self, status, rounds, dirty):
+    def __init__(self, status, rounds, dirty, round_stats=None):
         self._status = status
         self._rounds = rounds
         self._dirty = dirty
+        self._round_stats = round_stats
 
     @property
     def status(self):
@@ -236,6 +268,13 @@ class StreamResult:
     def n_trimmed(self) -> int:
         return int((~np.asarray(self._status)).sum())
 
+    @property
+    def round_stats(self):
+        """Per-round fixpoint telemetry (:class:`repro.obs.RoundStats`)
+        for this batch, or ``None`` when the engine was planned without
+        ``instrument=True``."""
+        return self._round_stats
+
     def __repr__(self):  # no device sync: report only static facts
         return f"StreamResult(n={self._status.shape[0]})"
 
@@ -245,7 +284,9 @@ class StreamResult:
 def plan_stream(graph, method: str = "ac4", backend: str = "dense", *,
                 capacity: int | None = None,
                 load_factor: float | None = None,
-                use_kernel: bool | None = None) -> "StreamEngine":
+                use_kernel: bool | None = None,
+                instrument: bool = False,
+                max_rounds: int | None = None) -> "StreamEngine":
     """Build a :class:`StreamEngine` over ``graph`` (a :class:`CSRGraph`
     or a pre-built :class:`DeltaCSR` overlay).
 
@@ -257,18 +298,29 @@ def plan_stream(graph, method: str = "ac4", backend: str = "dense", *,
     :meth:`DeltaCSR.compact`.  A pre-built :class:`DeltaCSR` carries its
     own sizing, so passing either kwarg with one raises rather than
     silently ignoring it.
+
+    ``instrument=True`` threads per-round fixpoint telemetry through
+    every dispatch (DESIGN.md §11): each :class:`StreamResult` (and the
+    ``retrim`` :class:`TrimResult`) carries a ``round_stats``
+    :class:`repro.obs.RoundStats`.  ``max_rounds`` caps the static round
+    buffer; rounds past it fold into the last slot (totals stay exact).
+    The default keeps stats compiled out — zero extra work, bit-identical
+    results.
     """
     return StreamEngine(graph, method=method, backend=backend,
                         capacity=capacity, load_factor=load_factor,
-                        use_kernel=use_kernel)
+                        use_kernel=use_kernel, instrument=instrument,
+                        max_rounds=max_rounds)
 
 
 class StreamEngine(EngineBase):
     """Compile-once incremental trimming over one mutating graph.  Build
     with :func:`plan_stream`."""
 
+    family = "stream"
+
     def __init__(self, graph, *, method, backend, capacity, load_factor,
-                 use_kernel):
+                 use_kernel, instrument=False, max_rounds=None):
         self.spec = get_kernel(method, family="stream")
         if backend not in STREAM_BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; expected one "
@@ -289,9 +341,13 @@ class StreamEngine(EngineBase):
         self.method = method
         self.backend = backend
         self.use_kernel = use_kernel
+        self.instrument = bool(instrument)
+        self.max_rounds = (obs.round_capacity(delta.n, max_rounds)
+                           if self.instrument else 0)
         self._tarrs = None
         self._state = None          # (status bool (n,), counters int32 (n,))
         self._rounds_total = None   # device scalar, accumulated lazily
+        self._last_stats = None     # stats buffers of the latest dispatch
         self._compactions = 0
         if delta.n:
             self.retrim(full=True)  # establish the fixpoint at plan time
@@ -299,6 +355,12 @@ class StreamEngine(EngineBase):
             import jax.numpy as jnp
             self._state = (jnp.zeros((0,), bool), jnp.zeros((0,), jnp.int32))
             self._rounds_total = jnp.array(0, jnp.int32)
+
+    def plan_signature(self) -> str:
+        sig = (f"stream[{self.method}/{self.backend}]"
+               f"(n={self.delta.n},m={self.delta.m_base},"
+               f"cap={self.delta.capacity})")
+        return sig + "+stats" if self.instrument else sig
 
     # -- cached resources --------------------------------------------------
     def _transpose_arrays(self):
@@ -361,6 +423,20 @@ class StreamEngine(EngineBase):
         self._rounds_total = (rounds if self._rounds_total is None
                               else self._rounds_total + rounds)
 
+    def _wrap_stats(self, rounds, stats):
+        """RoundStats for the latest dispatch (also kept as
+        ``_last_stats`` so zero-dispatch ``retrim()`` can report the
+        telemetry of the batch that produced the current fixpoint)."""
+        if not self.instrument:
+            return None
+        rs = (obs.RoundStats(rounds, stats, max_rounds=self.max_rounds)
+              if stats is not None else
+              obs.RoundStats(0, obs.stats_init(self.max_rounds,
+                                               _STAT_NAMES),
+                             max_rounds=self.max_rounds))
+        self._last_stats = rs
+        return rs
+
     # -- execution ---------------------------------------------------------
     def apply(self, deletions=None, insertions=None) -> StreamResult:
         """Apply one edge-update batch and advance the fixpoint.
@@ -376,7 +452,8 @@ class StreamEngine(EngineBase):
         if d.n == 0:
             if dsrc.size or isrc.size:
                 raise ValueError("cannot update an empty (n=0) graph")
-            return StreamResult(self._state[0], 0, False)
+            return StreamResult(self._state[0], 0, False,
+                                round_stats=self._wrap_stats(0, None))
         # validate the whole batch before anything commits: a bad
         # insertion must not leave the deletions half-applied
         isrc, idst = check_edge_ids(d.n, isrc, idst)
@@ -387,14 +464,17 @@ class StreamEngine(EngineBase):
         eids, slots_del = d.resolve_deletions(dsrc, ddst)
         slots_ins = d.stage_inserts(isrc, idst)
         fn = _stream_runner(self.method, self.use_kernel, full=False,
-                            revivable=bool(isrc.size))
-        overlay, state, rounds, dirty = self._dispatch(
+                            revivable=bool(isrc.size),
+                            instrument=self.instrument,
+                            max_rounds=self.max_rounds)
+        overlay, state, rounds, dirty, stats = self._dispatch(
             fn, self._transpose_arrays(), self._overlay_arrays(),
             self._state,
             self._padded_updates(dsrc, ddst, eids, slots_del, isrc, idst,
                                  slots_ins))
         self._write_back(overlay, state, rounds)
-        res = StreamResult(state[0], rounds, dirty)
+        res = StreamResult(state[0], rounds, dirty,
+                           round_stats=self._wrap_stats(rounds, stats))
         if d.needs_compact:
             self.compact()
         return res
@@ -412,21 +492,25 @@ class StreamEngine(EngineBase):
         import jax.numpy as jnp
         if full and self.delta.n:
             fn = _stream_runner(self.method, self.use_kernel, full=True,
-                                revivable=False)
+                                revivable=False,
+                                instrument=self.instrument,
+                                max_rounds=self.max_rounds)
             z = np.zeros(0, np.int64)
             state_in = (self._state if self._state is not None else (
                 jnp.zeros((self.delta.n,), bool),
                 jnp.zeros((self.delta.n,), jnp.int32)))
-            overlay, state, rounds, _ = self._dispatch(
+            overlay, state, rounds, _, stats = self._dispatch(
                 fn, self._transpose_arrays(), self._overlay_arrays(),
                 state_in, self._padded_updates(z, z, z, z, z, z, z))
             self.delta.tomb, self.delta.ins_src, self.delta.ins_dst, \
                 self.delta.ins_alive = overlay
             self._state = state
             self._rounds_total = rounds
+            self._wrap_stats(rounds, stats)
         status, _ = self._state
         return TrimResult(status=status.astype(jnp.int32),
-                          rounds=self._rounds_total)
+                          rounds=self._rounds_total,
+                          round_stats=self._last_stats)
 
     def snapshot(self) -> CSRGraph:
         """Materialize the current graph (base minus tombstones plus live

@@ -4,11 +4,18 @@
 CPU-only; TPU v5e is the lowering TARGET).  Model code calls these wrappers,
 never pallas_call directly; the dry-run lowers with ``interpret=False``
 disabled paths replaced by the jnp references so HLO stays analyzable.
+
+Every wrapper notes its kernel choice to the span recorder via
+:func:`repro.obs.note_kernel`.  Inside a jitted caller that Python runs
+at *trace* time only, so each note marks a kernel selection being baked
+into a fresh executable — retrace attribution for free, and a no-op
+(one attribute read) when no recorder is installed.
 """
 from __future__ import annotations
 
 import jax
 
+from .. import obs
 from . import ref
 from .bucket_peel import bucket_peel_pallas as _bpl
 from .counter_scatter import counter_scatter_pallas as _csc
@@ -28,6 +35,7 @@ def flash_attention(q, k, v, *, causal=True, sm_scale=None,
     twin (same math, streaming memory) so lowering/dry-run stays sane."""
     if use_kernel is None:
         use_kernel = on_tpu()
+    obs.note_kernel("flash_attention", use_kernel=bool(use_kernel))
     if use_kernel:
         return _fa(q, k, v, causal=causal, sm_scale=sm_scale,
                    interpret=not on_tpu(), **kw)
@@ -47,6 +55,7 @@ def segment_sum(values, seg_ids, num_segments: int,
                 use_kernel: bool | None = None, **kw):
     if use_kernel is None:
         use_kernel = on_tpu()
+    obs.note_kernel("segment_sum", use_kernel=bool(use_kernel))
     if use_kernel:
         return _ssp(values, seg_ids, num_segments,
                     interpret=not on_tpu(), **kw)
@@ -57,6 +66,7 @@ def first_live_scan(flags, valid, active, use_kernel: bool | None = None,
                     **kw):
     if use_kernel is None:
         use_kernel = on_tpu()
+    obs.note_kernel("first_live_scan", use_kernel=bool(use_kernel))
     if use_kernel:
         return _fls(flags, valid, active, interpret=not on_tpu(), **kw)
     return ref.first_live_ref(flags, valid, active)
@@ -66,6 +76,7 @@ def frontier_expand(flags, valid, pending, use_kernel: bool | None = None,
                     **kw):
     if use_kernel is None:
         use_kernel = on_tpu()
+    obs.note_kernel("frontier_expand", use_kernel=bool(use_kernel))
     if use_kernel:
         return _fex(flags, valid, pending, interpret=not on_tpu(), **kw)
     return ref.frontier_expand_ref(flags, valid, pending)
@@ -75,6 +86,7 @@ def counter_scatter(counters, status, upd_src, upd_delta,
                     use_kernel: bool | None = None, **kw):
     if use_kernel is None:
         use_kernel = on_tpu()
+    obs.note_kernel("counter_scatter", use_kernel=bool(use_kernel))
     if use_kernel:
         return _csc(counters, status, upd_src, upd_delta,
                     interpret=not on_tpu(), **kw)
@@ -84,6 +96,7 @@ def counter_scatter(counters, status, upd_src, upd_delta,
 def bucket_peel(counters, alive, k, use_kernel: bool | None = None, **kw):
     if use_kernel is None:
         use_kernel = on_tpu()
+    obs.note_kernel("bucket_peel", use_kernel=bool(use_kernel))
     if use_kernel:
         return _bpl(counters, alive, k, interpret=not on_tpu(), **kw)
     return ref.bucket_peel_ref(counters, alive, k)

@@ -90,12 +90,22 @@ _STREAM_GRAPHS = {
 
 
 def serve_trim_stream(graph: str = "ER", ticks: int = 20, batch: int = 256,
-                      seed: int = 0):
+                      seed: int = 0, instrument: bool = False,
+                      trace: str | None = None):
     """Drive a :class:`~repro.core.stream.StreamEngine` with a synthetic
     update feed: each tick deletes a batch of random live edges and
     re-inserts a previously deleted batch (re-insertions may hit the
     revival path and trigger the from-scratch fallback — reported as
-    ``dirty``).  The serving metric is sustained updates/sec."""
+    ``dirty``).
+
+    The serving metric is **steady-state** updates/sec, read off the
+    ``obs`` span recorder: every tick is a span, every engine dispatch
+    inside it carries compile-vs-execute attribution, and ticks whose
+    dispatch compiled are excluded from the throughput window (naive
+    wall-clock-over-everything math charges compile time to the first
+    window and understates sustained throughput).  ``--trace`` exports
+    the full tick/dispatch timeline for chrome://tracing."""
+    from .. import obs
     from ..core.stream import plan_stream
     from ..graphs import generators
 
@@ -103,33 +113,59 @@ def serve_trim_stream(graph: str = "ER", ticks: int = 20, batch: int = 256,
     g = getattr(generators, fn_name)(**kwargs)
     # headroom for many insert batches between compactions: every compact
     # changes the base CSR shape and costs one retrace of the apply step
-    engine = plan_stream(g, capacity=max(4096, 16 * batch))
+    engine = plan_stream(g, capacity=max(4096, 16 * batch),
+                         instrument=instrument)
     rng = np.random.default_rng(seed)
     src, dst = engine.delta._src_np.copy(), engine.delta._dst_np.copy()
     alive = np.ones(g.m, bool)
     pending = []                     # deleted batches awaiting re-insertion
-    n_updates = dirty_ticks = 0
-    t0 = time.perf_counter()
-    for tick in range(ticks):
-        k = min(batch, int(alive.sum()))
-        ids = rng.choice(np.nonzero(alive)[0], k, replace=False)
-        alive[ids] = False
-        ins = pending.pop(0) if len(pending) >= 3 else None
-        res = engine.apply(
-            deletions=(src[ids], dst[ids]),
-            insertions=None if ins is None else (src[ins], dst[ins]))
-        if ins is not None:
-            alive[ins] = True
-        pending.append(ids)
-        n_updates += k + (0 if ins is None else len(ins))
-        dirty_ticks += bool(res.dirty)
-    dt = time.perf_counter() - t0
-    res = engine.retrim()
-    print(f"[serve] trim-stream {graph} n={g.n} m={g.m}: {ticks} ticks, "
-          f"{n_updates} updates in {dt*1e3:.0f} ms "
-          f"({n_updates/dt:,.0f} updates/s), dirty ticks {dirty_ticks}, "
+    dirty_ticks = 0
+    with obs.recording() as rec:
+        for tick in range(ticks):
+            k = min(batch, int(alive.sum()))
+            ids = rng.choice(np.nonzero(alive)[0], k, replace=False)
+            alive[ids] = False
+            ins = pending.pop(0) if len(pending) >= 3 else None
+            n_upd = k + (0 if ins is None else len(ins))
+            with obs.span("tick", cat="serve", tick=tick, updates=n_upd):
+                res = engine.apply(
+                    deletions=(src[ids], dst[ids]),
+                    insertions=None if ins is None else
+                    (src[ins], dst[ins]))
+                _ = int(res.rounds)  # host sync closes the span honestly
+            if ins is not None:
+                alive[ins] = True
+            pending.append(ids)
+            dirty_ticks += bool(res.dirty)
+        res = engine.retrim()
+
+    tick_spans = rec.select("tick", cat="serve")
+    dispatches = rec.select("dispatch", cat="engine")
+
+    def compiled_during(t):
+        return any(d.attrs.get("phase") == "compile+execute"
+                   and t.ts <= d.ts < t.ts + t.dur for d in dispatches)
+
+    steady = [t for t in tick_spans if not compiled_during(t)]
+    warm = len(tick_spans) - len(steady)
+    n_updates = sum(t.attrs["updates"] for t in tick_spans)
+    steady_s = sum(t.dur for t in steady)
+    ups = (sum(t.attrs["updates"] for t in steady) / steady_s
+           if steady_s else float("nan"))
+    print(f"[serve] trim-stream {graph} n={g.n} m={g.m}: {ticks} ticks "
+          f"({warm} compile, excluded), {n_updates} updates, "
+          f"{ups:,.0f} updates/s steady-state, dirty ticks {dirty_ticks}, "
           f"trimmed {res.n_trimmed} ({res.trimmed_fraction*100:.1f}%), "
           f"compactions {engine.compactions}")
+    if instrument and res.round_stats is not None:
+        rs = res.round_stats
+        print(f"[serve]   last-batch telemetry: "
+              f"frontier {int(rs.total('r_frontier'))}, "
+              f"edges {int(rs.total('r_edges'))}, "
+              f"decrements {int(rs.total('r_decrements'))}")
+    if trace:
+        path = rec.to_chrome_trace(trace)
+        print(f"[serve]   chrome trace: {path} ({len(rec.spans)} spans)")
     return engine
 
 
@@ -144,10 +180,15 @@ def main():
     ap.add_argument("--graph", default="ER", choices=sorted(_STREAM_GRAPHS))
     ap.add_argument("--ticks", type=int, default=20)
     ap.add_argument("--update-batch", type=int, default=256)
+    ap.add_argument("--instrument", action="store_true",
+                    help="device-resident round telemetry (trim-stream)")
+    ap.add_argument("--trace", metavar="PATH",
+                    help="write a chrome://tracing timeline (trim-stream)")
     args = ap.parse_args()
     if args.app == "trim-stream":
         serve_trim_stream(args.graph, ticks=args.ticks,
-                          batch=args.update_batch)
+                          batch=args.update_batch,
+                          instrument=args.instrument, trace=args.trace)
         return
     if args.arch is None:
         ap.error("--arch is required for --app model")

@@ -1,0 +1,31 @@
+"""Observability subsystem (DESIGN.md §11).
+
+Three layers, all opt-in and all zero-cost when off:
+
+* **device-resident fixpoint telemetry** (``obs.stats``) — per-round
+  stats (frontier size, edges traversed, counter decrements) threaded
+  through the engines' jitted fixpoints as extra carry outputs when a
+  plan is built with ``instrument=True``.  Buffers are pow2-padded to a
+  static round capacity so instrumented plans compile once;
+  ``instrument=False`` compiles the stats out entirely (bit-identical
+  results, identical dispatch and trace counts).
+* **host-side span tracing** (``obs.recorder``) — every
+  ``EngineBase._dispatch`` is wrapped in a structured span (engine
+  family, plan signature, wall time, compile-vs-execute attribution)
+  collected by a process-global :class:`Recorder`.  The default global
+  recorder is disabled; install one with :func:`recording`.
+* **exporters** (``obs.export``) — JSONL (one span per line) and
+  chrome://tracing ``traceEvents`` JSON, both round-trippable.
+"""
+from .export import (read_chrome_trace, read_jsonl, to_chrome_trace,
+                     to_jsonl)
+from .recorder import (Recorder, Span, get_recorder, instant, note_kernel,
+                       recording, set_recorder, span)
+from .stats import RoundStats, round_capacity, stats_init, stats_record
+
+__all__ = [
+    "Recorder", "Span", "get_recorder", "set_recorder", "recording",
+    "span", "instant", "note_kernel",
+    "RoundStats", "round_capacity", "stats_init", "stats_record",
+    "to_jsonl", "read_jsonl", "to_chrome_trace", "read_chrome_trace",
+]

@@ -1,0 +1,181 @@
+"""Process-global span recorder (DESIGN.md §11).
+
+A :class:`Recorder` collects :class:`Span` records — named, categorized
+wall-time intervals with free-form JSON-serializable attributes.  The
+engines' shared ``EngineBase._dispatch`` emits one span per device
+dispatch (engine family, plan signature, compile-vs-execute phase,
+retrace attribution); drivers add their own structural spans (the SCC
+driver's generations, the serving loop's ticks).
+
+The process-global recorder is **disabled** by default: ``span()`` on a
+disabled recorder is a no-op context and ``add``/``instant`` return
+immediately, so un-observed runs pay one attribute read per dispatch.
+Install an enabled recorder for a scope with::
+
+    with obs.recording() as rec:
+        engine.run()
+    rec.to_chrome_trace("trace.json")        # chrome://tracing
+    rec.to_jsonl("spans.jsonl")              # one span per line
+
+Timestamps are ``time.perf_counter`` seconds relative to the recorder's
+epoch (its construction time), so spans from one recorder share a
+monotonic timeline regardless of wall-clock adjustments.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+from . import export as _export
+
+
+@dataclasses.dataclass
+class Span:
+    """One recorded interval (``ph="X"``) or instant event (``ph="i"``).
+
+    ts/dur are seconds relative to the owning recorder's epoch; exporters
+    convert to microseconds (the chrome ``trace_event`` unit).
+    """
+
+    name: str
+    cat: str = "span"
+    ts: float = 0.0
+    dur: float = 0.0
+    ph: str = "X"
+    attrs: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def to_dict(self) -> dict:
+        return {"name": self.name, "cat": self.cat, "ph": self.ph,
+                "ts": self.ts, "dur": self.dur, "attrs": dict(self.attrs)}
+
+
+class Recorder:
+    """Span collector.  Construct enabled; the module-global default is a
+    disabled instance (see :func:`get_recorder`)."""
+
+    def __init__(self, enabled: bool = True):
+        self.enabled = enabled
+        self.spans: List[Span] = []
+        self.epoch = time.perf_counter()
+
+    def clear(self) -> None:
+        self.spans = []
+        self.epoch = time.perf_counter()
+
+    # -- recording ---------------------------------------------------------
+    @contextlib.contextmanager
+    def span(self, name: str, cat: str = "span", **attrs):
+        """Context manager timing its body.  Yields the mutable
+        :class:`Span` (attrs may be filled in from inside the body);
+        yields ``None`` and records nothing when disabled."""
+        if not self.enabled:
+            yield None
+            return
+        sp = Span(name=name, cat=cat,
+                  ts=time.perf_counter() - self.epoch, attrs=dict(attrs))
+        try:
+            yield sp
+        finally:
+            sp.dur = (time.perf_counter() - self.epoch) - sp.ts
+            self.spans.append(sp)
+
+    def add(self, name: str, cat: str = "span", *, ts: float, dur: float,
+            **attrs) -> Optional[Span]:
+        """Record an already-measured interval (``ts`` in perf_counter
+        seconds, absolute — converted to the recorder's epoch)."""
+        if not self.enabled:
+            return None
+        sp = Span(name=name, cat=cat, ts=ts - self.epoch, dur=dur,
+                  attrs=dict(attrs))
+        self.spans.append(sp)
+        return sp
+
+    def instant(self, name: str, cat: str = "instant",
+                **attrs) -> Optional[Span]:
+        if not self.enabled:
+            return None
+        sp = Span(name=name, cat=cat, ph="i",
+                  ts=time.perf_counter() - self.epoch, attrs=dict(attrs))
+        self.spans.append(sp)
+        return sp
+
+    # -- queries -----------------------------------------------------------
+    def select(self, name: Optional[str] = None, cat: Optional[str] = None,
+               **attrs) -> List[Span]:
+        """Spans matching every given criterion (attrs match by
+        equality on ``span.attrs``)."""
+        out = []
+        for sp in self.spans:
+            if name is not None and sp.name != name:
+                continue
+            if cat is not None and sp.cat != cat:
+                continue
+            if any(sp.attrs.get(k) != v for k, v in attrs.items()):
+                continue
+            out.append(sp)
+        return out
+
+    def total(self, name: Optional[str] = None, cat: Optional[str] = None,
+              **attrs) -> float:
+        """Summed duration (seconds) of the matching spans."""
+        return sum(sp.dur for sp in self.select(name, cat, **attrs))
+
+    # -- exporters ---------------------------------------------------------
+    def to_jsonl(self, path: str) -> str:
+        return _export.to_jsonl(self.spans, path)
+
+    def to_chrome_trace(self, path: str) -> str:
+        return _export.to_chrome_trace(self.spans, path)
+
+    def __repr__(self):
+        state = "enabled" if self.enabled else "disabled"
+        return f"Recorder({state}, spans={len(self.spans)})"
+
+
+_GLOBAL = Recorder(enabled=False)
+
+
+def get_recorder() -> Recorder:
+    """The process-global recorder (disabled unless one was installed)."""
+    return _GLOBAL
+
+
+def set_recorder(rec: Recorder) -> Recorder:
+    """Install ``rec`` as the process-global recorder; returns the
+    previous one (so callers can restore it)."""
+    global _GLOBAL
+    prev = _GLOBAL
+    _GLOBAL = rec
+    return prev
+
+
+@contextlib.contextmanager
+def recording(recorder: Optional[Recorder] = None):
+    """Install an enabled recorder for the scope of the ``with`` block and
+    restore the previous global on exit.  Yields the recorder."""
+    rec = Recorder() if recorder is None else recorder
+    prev = set_recorder(rec)
+    try:
+        yield rec
+    finally:
+        set_recorder(prev)
+
+
+def span(name: str, cat: str = "span", **attrs):
+    """``get_recorder().span(...)`` — a no-op context when disabled."""
+    return _GLOBAL.span(name, cat=cat, **attrs)
+
+
+def instant(name: str, cat: str = "instant", **attrs):
+    return _GLOBAL.instant(name, cat=cat, **attrs)
+
+
+def note_kernel(kernel: str, **attrs) -> None:
+    """Trace-time kernel-selection note, called by the ``kernels.ops``
+    wrappers.  Inside a jitted caller this Python code runs at *trace*
+    time only, so each instant event marks a kernel choice being baked
+    into a fresh executable — retrace attribution for free."""
+    if _GLOBAL.enabled:
+        _GLOBAL.instant(kernel, cat="kernel", **attrs)

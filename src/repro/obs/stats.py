@@ -1,0 +1,165 @@
+"""Device-resident per-round fixpoint statistics (DESIGN.md §11).
+
+When a plan is built with ``instrument=True`` the engine kernels thread
+extra ``(R,)`` int32 buffers through their ``lax.while_loop`` carries —
+one slot per fixpoint round — recording frontier size, edges traversed,
+and (for counter-based kernels) counter decrements.  ``R`` is a *static*
+pow2 round capacity (:func:`round_capacity`), so instrumented plans
+compile once regardless of how many rounds a given input actually takes.
+
+Writes go through :func:`stats_record`, which clamps the round index to
+the last slot: a run that exceeds the capacity accumulates its overflow
+rounds into ``buf[R-1]``, so per-buffer *totals* stay exact even when
+the per-round breakdown saturates.  Kernels that pre-charge work before
+the loop (AC-4's init scan) attribute it to slot 0.
+
+The engines wrap the raw buffers in :class:`RoundStats`, which
+materializes to host numpy lazily and exposes the derived quantities the
+paper's experiments need (max edges per worker, imbalance ratio).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+# Default cap on the per-round breakdown.  Fixpoints on n vertices take at
+# most n+1 rounds, but bounded-depth graphs (everything except chains)
+# converge in far fewer; 1024 slots ≈ 4 KiB per buffer keeps the carry
+# negligible while still resolving every round of the bench families.
+MAX_ROUND_SLOTS = 1024
+
+
+def _pow2(x: int) -> int:
+    # local copy (core.graph has one too) — obs must not import repro.core
+    return 1 if x <= 1 else 1 << (int(x) - 1).bit_length()
+
+
+def round_capacity(n: int, max_rounds: Optional[int] = None) -> int:
+    """Static round-buffer capacity for an n-vertex fixpoint.
+
+    ``max_rounds`` overrides the default ``min(n + 2, 1024)`` bound (it is
+    still pow2-padded so nearby requests share compiled executables).
+    """
+    if max_rounds is not None:
+        if max_rounds < 1:
+            raise ValueError(f"max_rounds must be >= 1, got {max_rounds}")
+        return _pow2(max_rounds)
+    return _pow2(min(int(n) + 2, MAX_ROUND_SLOTS))
+
+
+def stats_init(max_rounds: int, names: Sequence[str],
+               lanes: int = 0) -> Dict[str, jnp.ndarray]:
+    """Zeroed round buffers for a while_loop carry: ``(R,)`` int32 per
+    name, or ``(lanes, R)`` when ``lanes > 0`` (per-shard stats)."""
+    shape = (max_rounds,) if lanes == 0 else (lanes, max_rounds)
+    return {name: jnp.zeros(shape, jnp.int32) for name in names}
+
+
+def stats_record(bufs: Dict[str, jnp.ndarray], rnd: jnp.ndarray,
+                 **values) -> Dict[str, jnp.ndarray]:
+    """Accumulate ``values`` into round slot ``rnd`` (clamped to the last
+    slot, so overflow rounds keep totals exact).  Returns the new dict —
+    carries are immutable."""
+    out = dict(bufs)
+    for name, val in values.items():
+        buf = out[name]
+        r = jnp.minimum(rnd, buf.shape[-1] - 1)
+        out[name] = buf.at[..., r].add(jnp.asarray(val, buf.dtype))
+    return out
+
+
+class RoundStats:
+    """Host-side view of one run's round buffers.
+
+    ``buffers`` maps stat name → ``(R,)`` array (or ``(B, R)`` for
+    batched/stacked runs); ``per_worker`` optionally carries the final
+    per-worker traversed-edge totals ``(workers,)`` (or ``(B, workers)``).
+    Device arrays are materialized to numpy lazily on first access.
+    """
+
+    def __init__(self, rounds, buffers: Dict[str, object],
+                 per_worker=None, max_rounds: Optional[int] = None):
+        self._rounds = rounds
+        self._buffers = dict(buffers)
+        self._per_worker = per_worker
+        self._max_rounds = max_rounds
+        self._np: Optional[Dict[str, np.ndarray]] = None
+
+    # -- materialization ---------------------------------------------------
+    def _host(self) -> Dict[str, np.ndarray]:
+        if self._np is None:
+            self._np = {k: np.asarray(v) for k, v in self._buffers.items()}
+        return self._np
+
+    @property
+    def rounds(self) -> np.ndarray:
+        return np.asarray(self._rounds)
+
+    @property
+    def max_rounds(self) -> int:
+        if self._max_rounds is not None:
+            return self._max_rounds
+        any_buf = next(iter(self._buffers.values()))
+        return int(any_buf.shape[-1])
+
+    @property
+    def names(self):
+        return sorted(self._buffers)
+
+    @property
+    def per_worker(self) -> Optional[np.ndarray]:
+        if self._per_worker is None:
+            return None
+        return np.asarray(self._per_worker)
+
+    @property
+    def overflowed(self) -> bool:
+        """True when some run took more rounds than the buffer resolves
+        (totals are still exact; the tail is folded into the last slot)."""
+        return bool(np.any(self.rounds > self.max_rounds))
+
+    # -- queries -----------------------------------------------------------
+    def per_round(self, name: str) -> np.ndarray:
+        """The ``(R,)`` (or ``(B, R)``) per-round breakdown for a stat."""
+        return self._host()[name]
+
+    def total(self, name: str) -> np.ndarray:
+        """Exact total over all rounds (summing the clamped buffer)."""
+        return self._host()[name].sum(axis=-1)
+
+    def max_worker_edges(self) -> Optional[np.ndarray]:
+        if self._per_worker is None:
+            return None
+        return self.per_worker.max(axis=-1)
+
+    def imbalance(self) -> Optional[np.ndarray]:
+        """max/mean per-worker traversed edges — the paper's work-skew
+        metric (1.0 = perfectly balanced)."""
+        pw = self.per_worker
+        if pw is None:
+            return None
+        mean = pw.mean(axis=-1)
+        return pw.max(axis=-1) / np.maximum(mean, 1e-12)
+
+    def to_dict(self) -> dict:
+        """JSON-friendly summary (python lists / scalars only)."""
+        d = {
+            "rounds": np.asarray(self.rounds).tolist(),
+            "max_rounds": self.max_rounds,
+            "overflowed": self.overflowed,
+            "totals": {k: self.total(k).tolist() for k in self.names},
+            "per_round": {k: self.per_round(k).tolist()
+                          for k in self.names},
+        }
+        if self._per_worker is not None:
+            d["per_worker"] = self.per_worker.tolist()
+            d["max_worker_edges"] = self.max_worker_edges().tolist()
+            d["imbalance"] = self.imbalance().tolist()
+        return d
+
+    def __repr__(self):
+        names = ",".join(self.names)
+        return (f"RoundStats(rounds={self.rounds.tolist()}, "
+                f"R={self.max_rounds}, stats=[{names}])")

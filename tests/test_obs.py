@@ -1,0 +1,336 @@
+"""Observability subsystem coverage (DESIGN.md §11): the zero-overhead
+invariant (``instrument=False`` is bit-identical, no extra dispatches, no
+retrace), device round-stats parity against a host oracle on all six
+graph families, span recording with compile attribution, exporter
+round-trips, and the bench regression gate's comparison rules."""
+import copy
+import json
+import os
+import sys
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import plan, plan_peel, plan_reach, plan_stream
+from repro.core.ref import trim_oracle
+from repro.core.scc import scc_decompose, same_partition, tarjan_oracle
+from repro.graphs import generators
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                "benchmarks"))
+from check_regression import Verdict, compare_docs  # noqa: E402
+
+
+def _families():
+    return {
+        "ER": generators.erdos_renyi(300, 360, seed=1),
+        "BA": generators.barabasi_albert(200, 3, seed=1),
+        "RMAT": generators.rmat(8, 320, seed=1),
+        "chain": generators.chain(50),
+        "layered": generators.layered_dag(200, 11, 4, seed=1),
+        "sink_heavy": generators.sink_heavy(200, 800, 0.9, seed=1),
+    }
+
+
+def host_ac4_rounds(indptr, indices, count_init_scan=True):
+    """Host oracle for AC-4's per-round telemetry: synchronous rounds,
+    frontier = newly-zero counters; traversed edges per round = the
+    frontier's in-list scans, with the counter-init scan (all m arcs)
+    charged to round 0 when the method counts it."""
+    n = len(indptr) - 1
+    outdeg = np.diff(indptr).astype(np.int64)
+    m = int(outdeg.sum())
+    indeg = np.zeros(n, np.int64)
+    np.add.at(indeg, indices, 1)
+    order = np.argsort(indices, kind="stable")
+    t_indptr = np.zeros(n + 1, np.int64)
+    np.cumsum(indeg, out=t_indptr[1:])
+    t_indices = np.repeat(np.arange(n), outdeg)[order]
+
+    c = outdeg.copy()
+    dead = np.zeros(n, bool)
+    frontier = c == 0
+    r_frontier, r_edges = [], []
+    while frontier.any():
+        e = int(indeg[frontier].sum())
+        if not r_frontier and count_init_scan:
+            e += m
+        r_frontier.append(int(frontier.sum()))
+        r_edges.append(e)
+        dead |= frontier
+        dec = np.zeros(n, np.int64)
+        for v in np.nonzero(frontier)[0]:
+            np.add.at(dec, t_indices[t_indptr[v]:t_indptr[v + 1]], 1)
+        c = c - dec
+        frontier = (c == 0) & ~dead
+    if not r_frontier and count_init_scan:
+        r_frontier, r_edges = [0], [m]
+    return np.asarray(r_frontier), np.asarray(r_edges)
+
+
+# -- zero-overhead invariant -------------------------------------------------
+
+def test_instrument_off_bit_identical_no_retrace_no_extra_dispatch():
+    g = generators.erdos_renyi(137, 400, seed=7)
+    for method in ("ac4", "ac6"):
+        plain = plan(g, method=method)
+        inst = plan(g, method=method, instrument=True)
+        with obs.recording() as rec_plain:
+            r0 = plain.run()
+        with obs.recording() as rec_inst:
+            r1 = inst.run()
+        # bit-identical results
+        assert np.array_equal(np.asarray(r0.status), np.asarray(r1.status))
+        assert int(r0.rounds) == int(r1.rounds)
+        # telemetry only where requested
+        assert r0.round_stats is None
+        assert r1.round_stats is not None
+        # identical dispatch counts, observed two ways
+        assert plain.dispatches == inst.dispatches == 1
+        assert len(rec_plain.select("dispatch", cat="engine")) == \
+            len(rec_inst.select("dispatch", cat="engine")) == 1
+        # the instrumented plan has its own cache entry: re-planning
+        # un-instrumented hits the existing executable, zero retraces
+        again = plan(g, method=method)
+        r2 = again.run()
+        assert again.traces == 0 and again.dispatches == 1
+        assert np.array_equal(np.asarray(r0.status), np.asarray(r2.status))
+
+
+# -- device round stats vs host oracle ---------------------------------------
+
+@pytest.mark.parametrize("family", ["ER", "BA", "RMAT", "chain",
+                                    "layered", "sink_heavy"])
+def test_ac4_round_stats_match_host_oracle(family):
+    g = _families()[family]
+    indptr, indices = g.to_numpy()
+    for method, init_scan in (("ac4", True), ("ac4*", False)):
+        rs = plan(g, method=method, instrument=True).run().round_stats
+        hf, he = host_ac4_rounds(indptr, indices, count_init_scan=init_scan)
+        pf, pe = rs.per_round("r_frontier"), rs.per_round("r_edges")
+        r = len(hf)
+        assert np.array_equal(pf[:r], hf), (family, method)
+        assert np.array_equal(pe[:r], he), (family, method)
+        assert pf[r:].sum() == 0 and pe[r:].sum() == 0, (family, method)
+        # status agrees with the trim oracle while we're here
+        status = np.asarray(plan(g, method=method).run().status)
+        assert np.array_equal(status.astype(bool),
+                              trim_oracle(indptr, indices))
+
+
+def test_round_totals_agree_with_per_worker_counters():
+    g = generators.layered_dag(400, 11, 4, seed=3)
+    engine = plan(g, method="ac4", workers=8, chunk=1, instrument=True)
+    res = engine.run(counters=True)
+    pw = np.asarray(res.per_worker_edges).astype(np.int64)
+    assert pw.shape == (8,)
+    assert int(res.round_stats.total("r_edges")) == int(pw.sum())
+    assert int(res.round_stats.total("r_frontier")) == int(res.n_trimmed)
+
+
+def test_overflow_clamps_keep_totals_exact():
+    g = generators.chain(60)                  # 60 rounds to the fixpoint
+    full = plan(g, method="ac4", instrument=True).run().round_stats
+    tiny = plan(g, method="ac4", instrument=True,
+                max_rounds=4).run().round_stats
+    assert not full.overflowed and tiny.overflowed
+    assert tiny.max_rounds == 4
+    for name in ("r_frontier", "r_edges"):
+        assert int(tiny.total(name)) == int(full.total(name)), name
+    # the tail is folded into the last slot
+    pf = tiny.per_round("r_frontier")
+    assert pf.shape == (4,) and pf[-1] == full.per_round(
+        "r_frontier")[3:].sum()
+
+
+# -- the other engine families -----------------------------------------------
+
+def test_reach_peel_stream_instrumented_smoke():
+    g = generators.erdos_renyi(200, 800, seed=5)
+
+    reach = plan_reach(g, instrument=True)
+    seeds = np.zeros(g.n, bool)
+    seeds[0] = True
+    rr = reach.run(seeds)
+    visited = int(np.asarray(rr.mask).sum())
+    assert int(rr.round_stats.total("r_frontier")) == visited
+    plain = np.asarray(plan_reach(g).run(seeds).mask)
+    assert np.array_equal(np.asarray(rr.mask), plain)
+
+    peel = plan_peel(g, instrument=True)
+    pr = peel.run(k=1)
+    assert pr.round_stats is not None
+    assert np.array_equal(np.asarray(pr.status),
+                          np.asarray(plan(g, method="ac4").run().status))
+
+    stream = plan_stream(g, capacity=64, instrument=True)
+    first = stream.retrim(full=True)
+    assert first.round_stats is not None
+    assert int(first.round_stats.total("r_frontier")) == int(first.n_trimmed)
+    d = stream.delta
+    live = ~d._tomb_np
+    src, dst = d._src_np[live], d._dst_np[live]
+    stream.apply(deletions=(src[:5], dst[:5]))
+    got = np.asarray(stream.retrim().status)
+    want = np.asarray(plan(stream.snapshot(), method="ac4").run().status)
+    assert np.array_equal(got, want)
+
+
+def test_sharded_instrumented_smoke():
+    g = generators.chain(50)                  # 1 device -> 1 shard lane
+    engine = plan(g, method="ac6", backend="sharded", instrument=True)
+    res = engine.run()
+    assert np.array_equal(np.asarray(res.status).astype(bool),
+                          trim_oracle(*g.to_numpy()))
+    rs = res.round_stats
+    assert rs is not None
+    assert int(np.asarray(rs.total("r_frontier")).sum()) == int(res.n_trimmed)
+
+
+def test_scc_decompose_instrumented():
+    g = generators.sink_heavy(300, 1200, 0.9, seed=2)
+    with obs.recording() as rec:
+        labels, stats = scc_decompose(g, counters=True, workers=4, chunk=1,
+                                      instrument=True)
+    assert same_partition(labels, tarjan_oracle(*g.to_numpy()))
+    pw = stats["per_worker_edges"]
+    assert pw.shape == (4,)
+    assert int(pw.sum()) == stats["trim_edges_traversed"]
+    assert stats["trim_rounds"] > 0 and stats["reach_rounds"] >= 0
+    gens = rec.select("generation", cat="scc")
+    assert len(gens) == stats["generations"]
+    assert all("pivots" in sp.attrs for sp in gens)
+    assert len(rec.select("dispatch", cat="engine")) > 0
+    # uninstrumented driver leaves the telemetry keys None
+    _, stats0 = scc_decompose(g)
+    assert stats0["trim_rounds"] is None and stats0["reach_rounds"] is None
+    assert stats0["per_worker_edges"] is None
+
+
+# -- span recorder + exporters -----------------------------------------------
+
+def test_recorder_disabled_is_noop():
+    rec = obs.get_recorder()
+    assert not rec.enabled
+    with obs.span("x", cat="t") as sp:
+        assert sp is None
+    assert obs.instant("y") is None
+
+
+def test_dispatch_spans_carry_compile_attribution():
+    g = generators.erdos_renyi(139, 420, seed=9)   # fresh shape -> compiles
+    with obs.recording() as rec:
+        engine = plan(g, method="ac4", instrument=True)
+        engine.run()
+        engine.run()
+    spans = rec.select("dispatch", cat="engine", family="trim")
+    assert len(spans) == engine.dispatches == 2
+    assert spans[0].attrs["phase"] == "compile+execute"
+    assert spans[0].attrs["traces"] >= 1
+    assert spans[1].attrs["phase"] == "execute"
+    assert spans[1].attrs["traces"] == 0
+    assert "+stats" in spans[0].attrs["plan"]
+    # kernel-selection notes are emitted at trace time only
+    kernel_notes = rec.select(cat="kernel")
+    assert all(sp.ph == "i" for sp in kernel_notes)
+
+
+def test_exporters_round_trip(tmp_path):
+    rec = obs.Recorder()
+    with rec.span("outer", cat="a", k=1):
+        with rec.span("inner", cat="b"):
+            pass
+    rec.instant("mark", cat="a", v="x")
+    want = [sp.to_dict() for sp in rec.spans]
+
+    jl = rec.to_jsonl(str(tmp_path / "spans.jsonl"))
+    assert obs.read_jsonl(jl) == want
+
+    ct = rec.to_chrome_trace(str(tmp_path / "trace.json"))
+    doc = json.load(open(ct))
+    assert isinstance(doc["traceEvents"], list)
+    got = obs.read_chrome_trace(ct)
+    assert [(d["name"], d["cat"], d["ph"]) for d in got] == \
+        [(d["name"], d["cat"], d["ph"]) for d in want]
+    for g_, w in zip(got, want):
+        assert g_["ts"] == pytest.approx(w["ts"], abs=1e-9)
+        assert g_["dur"] == pytest.approx(w["dur"], abs=1e-9)
+        assert g_["attrs"] == w["attrs"]
+
+
+def test_round_capacity():
+    assert obs.round_capacity(5) == 8          # pow2(5 + 2)
+    assert obs.round_capacity(10**9) == 1024   # clamped to MAX_ROUND_SLOTS
+    assert obs.round_capacity(100, max_rounds=3) == 4
+    with pytest.raises(ValueError):
+        obs.round_capacity(100, max_rounds=0)
+
+
+# -- the regression gate -----------------------------------------------------
+
+def _doc(**over):
+    d = {
+        "schema": 2, "bench": "obs", "smoke": True,
+        "env": {"jax_version": "0.4.37", "backend": "cpu",
+                "device_kind": "cpu", "device_count": 1,
+                "python": "3.11", "commit": "abc"},
+        "families": {"ER": {"n": 100, "m": 200, "edges_total": 42,
+                            "x_ms": 10.0, "ordering_ok": True}},
+        "ordering_ok": True,
+    }
+    d.update(over)
+    return d
+
+
+def test_compare_docs_ok_and_timing_tolerance():
+    assert compare_docs(_doc(), _doc()) == (Verdict.OK, [])
+    slow = _doc()
+    slow["families"]["ER"]["x_ms"] = 15.0      # within 2x
+    assert compare_docs(_doc(), slow)[0] == Verdict.OK
+    slow["families"]["ER"]["x_ms"] = 25.0      # beyond 2x
+    assert compare_docs(_doc(), slow)[0] == Verdict.FAIL
+    # tolerance applies to slowdowns only
+    fast = _doc()
+    fast["families"]["ER"]["x_ms"] = 0.1
+    assert compare_docs(_doc(), fast)[0] == Verdict.OK
+
+
+def test_compare_docs_deterministic_keys_exact():
+    drift = _doc()
+    drift["families"]["ER"]["edges_total"] = 43
+    verdict, msgs = compare_docs(_doc(), drift)
+    assert verdict == Verdict.FAIL and "edges_total" in msgs[0]
+
+
+def test_compare_docs_refuses_env_mismatch():
+    other = _doc()
+    other["env"] = dict(other["env"], backend="tpu")
+    verdict, msgs = compare_docs(_doc(), other)
+    assert verdict == Verdict.REFUSED
+    assert any("backend" in m for m in msgs)
+    # ...unless a scale-free claim is broken: that is a FAIL even
+    # cross-environment
+    other = copy.deepcopy(other)
+    other["families"]["ER"]["ordering_ok"] = False
+    assert compare_docs(_doc(), other)[0] == Verdict.FAIL
+
+
+def test_compare_docs_workload_mismatch_checks_scale_free_only():
+    small = _doc()
+    small["families"]["ER"]["n"] = 50
+    small["families"]["ER"]["edges_total"] = 7   # different size: ignored
+    verdict, _ = compare_docs(_doc(), small)
+    assert verdict == Verdict.OK
+    small = copy.deepcopy(small)
+    small["ordering_ok"] = False
+    assert compare_docs(_doc(), small)[0] == Verdict.FAIL
+
+
+def test_compare_docs_rejects_malformed():
+    v1 = _doc()
+    del v1["schema"]
+    verdict, msgs = compare_docs(v1, _doc())
+    assert verdict == Verdict.FAIL and "schema" in msgs[0]
+    wrong = _doc(bench="peel")
+    assert compare_docs(_doc(), wrong)[0] == Verdict.FAIL
