@@ -21,6 +21,13 @@ The three measurements per family:
 All timings are steady-state (first call warms the jit caches), median of
 ``--repeats``.  Output is one JSON document so the perf trajectory is
 machine-readable across PRs.
+
+Each family row also records two deterministic keys from one instrumented
+trim pass under the default ``frontier="auto"`` plan (DESIGN.md §12):
+``rounds`` (fixpoint rounds to convergence) and ``frontier_path_taken``
+("dense" — no round compacted, "sparse" — every round did, "mixed"),
+so the regression gate catches a direction-switch policy change even when
+wall-clock noise hides it.
 """
 from __future__ import annotations
 
@@ -152,6 +159,18 @@ def bench_family(name, kwargs, repeats):
     def trim_only():
         np.asarray(trim_engine.run(counters=False).status)
 
+    # one instrumented pass: rounds + which side of the direction switch
+    # the auto plan actually took (deterministic, gated exactly)
+    rs = plan(g, method="ac6", instrument=True).run(counters=False).round_stats
+    rounds = int(rs.rounds)
+    sparse_rounds = int(rs.total("r_sparse")) if "r_sparse" in rs.names else 0
+    if sparse_rounds == 0:
+        path = "dense"
+    elif sparse_rounds >= rounds:
+        path = "sparse"
+    else:
+        path = "mixed"
+
     def host():
         return host_bfs_driver(g)
 
@@ -165,6 +184,8 @@ def bench_family(name, kwargs, repeats):
     row = {
         "n": g.n, "m": g.m,
         "sccs": int(len(np.unique(labels_b))),
+        "rounds": rounds,
+        "frontier_path_taken": path,
         "trim_only_ms": round(_timeit(trim_only, repeats), 2),
         "host_bfs_ms": round(_timeit(host, repeats), 2),
         "batched_ms": round(_timeit(batched, repeats), 2),
@@ -173,7 +194,8 @@ def bench_family(name, kwargs, repeats):
         row["host_bfs_ms"] / max(row["batched_ms"], 1e-9), 2)
     print(f"#   trim-only {row['trim_only_ms']:.1f}ms | host-BFS "
           f"{row['host_bfs_ms']:.1f}ms | batched {row['batched_ms']:.1f}ms "
-          f"({row['speedup_host_over_batched']}x)", file=sys.stderr)
+          f"({row['speedup_host_over_batched']}x) "
+          f"[{rounds} rounds, {path} frontier]", file=sys.stderr)
     return row
 
 

@@ -24,18 +24,28 @@ What is compared depends on how well the workloads match:
     *exact* when the workload matches (same ``smoke`` flag and same
     per-family n/m).  These are machine-independent: any drift is a
     behavior change, not noise.
-  * Wall-clock keys (``*_ms``, ``updates_per_sec``) are gated only when
-    the workload matches AND the environment matches: fresh may not be
-    slower than baseline by more than ``--tolerance`` (default 2.0x —
-    wide because CI machines are noisy; the gate is for order-of-
-    magnitude regressions, not 10% drift).
+  * Wall-clock keys are gated only when the workload matches AND the
+    environment matches, within ``--tolerance`` (default 2.0x — wide
+    because CI machines are noisy; the gate is for order-of-magnitude
+    regressions, not 10% drift).  ``*_ms`` keys may not get slower;
+    ``*_per_sec`` and ``speedup_*`` keys (higher is better) may not
+    *drop* — an improvement on either is never a failure.
   * When workloads differ (e.g. fresh ``--smoke`` vs committed full
     run), only scale-free claims are checked: document well-formedness
     and ``ordering_ok`` (the paper's AC-3 > AC-4 >= AC-6 per-worker
     ordering holds at every size).
+  * A family key present in the baseline but absent from the fresh run
+    is a hard FAIL at *any* workload: a silently-dropped family is how a
+    benchmark regression hides, so the gate refuses to pass it.
 
-``--quick`` runs ``bench_obs --smoke`` fresh, gates it against the
-committed ``BENCH_obs.json``, and schema-validates every other committed
+When the verdict is FAIL because of per-family regressions, the last
+message is a one-line summary naming exactly which families regressed.
+
+``--quick`` runs ``bench_obs --smoke`` and ``bench_scc --smoke`` fresh
+(the latter exercises the sparse-frontier path: the smoke-size chain
+family compacts on every round under the default ``frontier="auto"``
+plan), gates them against the committed ``BENCH_obs.json`` /
+``BENCH_scc.json``, and schema-validates every other committed
 ``BENCH_*.json`` — cheap enough for CI on every push.
 """
 from __future__ import annotations
@@ -43,6 +53,7 @@ from __future__ import annotations
 import argparse
 import json
 import math
+import re
 import subprocess
 import sys
 from pathlib import Path
@@ -52,9 +63,12 @@ REPO = Path(__file__).resolve().parent.parent
 #: env keys that must match for wall-clock numbers to be comparable
 ENV_KEYS = ("jax_version", "backend", "device_kind")
 
-#: timing keys are gated loosely (slower-only); everything else numeric
-#: and deterministic is gated exactly
-TIMING_SUFFIXES = ("_ms", "_per_sec")
+#: timing keys (lower is better) are gated loosely, slower-only; rate
+#: and speedup keys (higher is better) are gated loosely, lower-only;
+#: everything else numeric and deterministic is gated exactly
+TIMING_SUFFIXES = ("_ms",)
+RATE_SUFFIXES = ("_per_sec",)
+RATE_PREFIXES = ("speedup_",)
 
 #: keys that are volatile by nature and never compared
 SKIP_KEYS = {"imbalance"}  # ratio of ints, already covered by the ints
@@ -68,6 +82,13 @@ class Verdict:
 
 def _is_timing(key: str) -> bool:
     return key.endswith(TIMING_SUFFIXES)
+
+
+def _is_rate(key: str) -> bool:
+    """Wall-clock-derived where *higher* is better (throughput, speedup
+    ratios): a drop beyond tolerance is the regression, a jump is the
+    win the benchmark exists to measure."""
+    return key.endswith(RATE_SUFFIXES) or key.startswith(RATE_PREFIXES)
 
 
 def validate_doc(doc: dict, label: str) -> list[str]:
@@ -131,12 +152,21 @@ def _walk(prefix: str, b, f, tolerance: float, out: list[str]) -> None:
             if b > 0 and f > b * tolerance:
                 out.append(f"{prefix}: {b} -> {f} "
                            f"(> {tolerance:g}x tolerance)")
+        elif _is_rate(key):
+            if b > 0 and f < b / tolerance:
+                out.append(f"{prefix}: {b} -> {f} "
+                           f"(> {tolerance:g}x rate drop)")
         elif isinstance(b, int) and isinstance(f, int):
             if b != f:
                 out.append(f"{prefix}: {b} -> {f} (deterministic key)")
         else:
             if not math.isclose(b, f, rel_tol=1e-6):
                 out.append(f"{prefix}: {b} -> {f} (deterministic key)")
+    elif isinstance(b, str) and isinstance(f, str):
+        # e.g. frontier_path_taken: a direction-switch policy change is a
+        # behavior change even when the timings absorb it
+        if b != f:
+            out.append(f"{prefix}: {b!r} -> {f!r} (deterministic key)")
 
 
 def compare_docs(baseline: dict, fresh: dict,
@@ -148,6 +178,10 @@ def compare_docs(baseline: dict, fresh: dict,
     means the environments differ and wall-clock numbers are not
     comparable — deterministic scale-free claims (``ordering_ok``) are
     still checked; a violated claim upgrades REFUSED to FAIL.
+
+    A baseline family missing from the fresh document is a FAIL
+    regardless of workload or environment: the gate must not silently
+    pass a run that dropped a family it was supposed to measure.
     """
     problems = validate_doc(baseline, "baseline") + validate_doc(fresh, "fresh")
     if problems:
@@ -156,6 +190,12 @@ def compare_docs(baseline: dict, fresh: dict,
         return Verdict.FAIL, [
             f"bench mismatch: baseline={baseline['bench']!r} "
             f"fresh={fresh['bench']!r}"]
+    missing = sorted(set(baseline["families"]) - set(fresh["families"]))
+    if missing:
+        return Verdict.FAIL, [
+            f"families missing from fresh run: {', '.join(missing)} "
+            f"(baseline has {len(baseline['families'])}, "
+            f"fresh has {len(fresh['families'])})"]
 
     mismatches = env_mismatch(baseline, fresh)
     workload_ok = _workload_matches(baseline, fresh)
@@ -171,7 +211,7 @@ def compare_docs(baseline: dict, fresh: dict,
                     regressions.append(
                         f"{scope}.families.{fam}: ordering_ok is False")
         if regressions:
-            return Verdict.FAIL, regressions
+            return Verdict.FAIL, _summarize(regressions)
         if mismatches:
             return Verdict.REFUSED, mismatches
         return Verdict.OK, [
@@ -184,8 +224,19 @@ def compare_docs(baseline: dict, fresh: dict,
     if baseline.get("ordering_ok") is True and fresh.get("ordering_ok") is False:
         regressions.append("ordering_ok: True -> False")
     if regressions:
-        return Verdict.FAIL, regressions
+        return Verdict.FAIL, _summarize(regressions)
     return Verdict.OK, []
+
+
+def _summarize(regressions: list[str]) -> list[str]:
+    """Append a one-line summary naming the regressed families."""
+    fams = sorted({m.group(1) for m in
+                   (re.search(r"families\.([^.:\s]+)", msg)
+                    for msg in regressions) if m})
+    if fams:
+        regressions = regressions + [
+            f"regressed families: {', '.join(fams)}"]
+    return regressions
 
 
 # -- CLI ----------------------------------------------------------------------
@@ -201,16 +252,24 @@ def _report(label: str, verdict: str, messages: list[str]) -> None:
         print(f"    {msg}")
 
 
-def run_quick(tolerance: float) -> tuple[str, list[str]]:
-    """Fresh ``bench_obs --smoke`` vs the committed BENCH_obs.json."""
-    fresh_path = Path("/tmp/BENCH_obs_quick.json")
-    cmd = [sys.executable, str(REPO / "benchmarks" / "bench_obs.py"),
+#: (bench script, committed baseline) pairs exercised by ``--quick``.
+#: bench_scc rides along because its smoke run drives the sparse-frontier
+#: path end to end (chain compacts every round under ``frontier="auto"``).
+QUICK_BENCHES = (("bench_obs.py", "BENCH_obs.json"),
+                 ("bench_scc.py", "BENCH_scc.json"))
+
+
+def run_quick_one(script: str, baseline: str,
+                  tolerance: float) -> tuple[str, list[str]]:
+    """Fresh ``<script> --smoke`` vs the committed ``<baseline>``."""
+    fresh_path = Path(f"/tmp/{Path(baseline).stem}_quick.json")
+    cmd = [sys.executable, str(REPO / "benchmarks" / script),
            "--smoke", "--out", str(fresh_path)]
     print(f"# running: {' '.join(cmd)}", file=sys.stderr)
     proc = subprocess.run(cmd, capture_output=True, text=True)
     if proc.returncode != 0:
-        return Verdict.FAIL, [f"bench_obs --smoke failed:\n{proc.stderr}"]
-    return compare_docs(_load(REPO / "BENCH_obs.json"), _load(fresh_path),
+        return Verdict.FAIL, [f"{script} --smoke failed:\n{proc.stderr}"]
+    return compare_docs(_load(REPO / baseline), _load(fresh_path),
                         tolerance)
 
 
@@ -221,9 +280,10 @@ def main() -> int:
     ap.add_argument("--fresh", type=Path,
                     help="freshly produced BENCH_*.json")
     ap.add_argument("--quick", action="store_true",
-                    help="run bench_obs --smoke and gate it against the "
-                         "committed BENCH_obs.json; also schema-validate "
-                         "every committed BENCH_*.json")
+                    help="run bench_obs --smoke and bench_scc --smoke "
+                         "(the sparse-frontier smoke) and gate them "
+                         "against the committed baselines; also schema-"
+                         "validate every committed BENCH_*.json")
     ap.add_argument("--tolerance", type=float, default=2.0,
                     help="max fresh/baseline wall-clock ratio (default 2.0)")
     ap.add_argument("--strict", action="store_true",
@@ -239,10 +299,12 @@ def main() -> int:
             _report(p.name, Verdict.FAIL if problems else Verdict.OK,
                     problems)
             failed |= bool(problems)
-        verdict, messages = run_quick(args.tolerance)
-        _report("bench_obs --smoke vs BENCH_obs.json", verdict, messages)
-        failed |= verdict == Verdict.FAIL
-        refused |= verdict == Verdict.REFUSED
+        for script, baseline in QUICK_BENCHES:
+            verdict, messages = run_quick_one(script, baseline,
+                                              args.tolerance)
+            _report(f"{script} --smoke vs {baseline}", verdict, messages)
+            failed |= verdict == Verdict.FAIL
+            refused |= verdict == Verdict.REFUSED
     elif args.baseline and args.fresh:
         verdict, messages = compare_docs(_load(args.baseline),
                                          _load(args.fresh), args.tolerance)

@@ -95,8 +95,9 @@ def ac3_kernel(indptr, indices, worker_ids, workers: int, active=None, *,
 
 
 def _run_ac3(graph_arrays, transpose_arrays, worker_ids, workers, active, *,
-             probe, window, use_kernel, counters, instrument=False,
-             max_rounds=0):
+             probe, window, use_kernel, counters, frontier=None,
+             instrument=False, max_rounds=0):
+    del frontier  # AC-3 re-checks every live vertex; no sparse path
     indptr, indices = graph_arrays
     status, rounds, pw, max_qp, _, stats = ac3_kernel(
         indptr, indices, worker_ids, workers, active=active, probe=probe,
@@ -107,4 +108,5 @@ def _run_ac3(graph_arrays, transpose_arrays, worker_ids, workers, active, *,
 
 register_kernel(KernelSpec(
     name="ac3", run=_run_ac3, needs_transpose=False,
-    supports_windowed=True, sharded_method="ac3"))
+    supports_windowed=True, sharded_method="ac3",
+    supports_frontier=False))

@@ -23,23 +23,30 @@ import jax
 import jax.numpy as jnp
 
 from .. import obs
-from .common import per_worker_add, worker_counts
+from .common import FrontierPlan, per_worker_add, worker_counts
 from .registry import KernelSpec, register_kernel
 
 _STAT_NAMES = ("r_frontier", "r_edges", "r_decrements")
 
 
 @partial(jax.jit, static_argnames=("workers", "count_init_scan", "counters",
-                                   "instrument", "max_rounds"))
+                                   "use_kernel", "frontier", "instrument",
+                                   "max_rounds"))
 def ac4_kernel(indptr, indices, t_indptr, t_indices, t_rows, worker_ids,
                workers: int, count_init_scan: bool, active=None, *,
-               counters: bool = True, instrument: bool = False,
-               max_rounds: int = 0):
+               counters: bool = True, use_kernel: bool | None = None,
+               frontier: FrontierPlan = FrontierPlan(),
+               instrument: bool = False, max_rounds: int = 0):
     """t_rows: (mT,) source vertex (the dead propagator w) of each Gᵀ edge.
 
     ``active``: optional (n,) bool — trim the induced subgraph.
     ``counters=False`` skips per-worker counter accumulation (the serving
     fast path) and returns ``None`` in the counter slots.
+    ``frontier`` (DESIGN.md §12) selects the sparse-frontier substrate:
+    with a non-dense plan each round gates on-device (``lax.cond``) between
+    the dense bulk decrement and a compacted one that expands only the
+    frontier's Gᵀ slices — identical decrement vector either way, so the
+    fixpoint is bit-identical round by round.
     ``instrument=True`` (DESIGN.md §11) threads static-shape ``(max_rounds,)``
     round buffers through the carry — frontier size, traversed edges, and
     counter decrements applied to live vertices per round — returned as the
@@ -67,14 +74,37 @@ def ac4_kernel(indptr, indices, t_indptr, t_indices, t_rows, worker_ids,
             per_worker0 = per_worker_add(per_worker0, deg_out, worker_ids,
                                          workers)
 
+    sparse = frontier.mode != "dense"
+    if sparse:
+        from ..kernels import ops as kops
+
+    def dense_dec(f):
+        # bulk FAA: each Gᵀ edge (w -> v) with w in the frontier decrements v
+        return jax.ops.segment_sum(
+            f[t_rows].astype(jnp.int32), t_indices, num_segments=n)
+
+    def sparse_dec(f):
+        # same decrement vector from only the frontier's Gᵀ row slices:
+        # compact -> expand Σ deg_in(frontier) edges -> scatter-add
+        ids, _ = kops.frontier_compact(f, frontier.cap,
+                                       use_kernel=use_kernel)
+        _, tgt, _, valid = kops.sparse_expand(
+            t_indptr, t_indices, ids, frontier.ecap, use_kernel=use_kernel)
+        return jnp.zeros((n,), jnp.int32).at[
+            jnp.where(valid, tgt, n)].add(1, mode="drop")
+
     def cond(state):
         return jnp.any(state["frontier"])
 
     def body(state):
-        frontier = state["frontier"]
-        # bulk FAA: each Gᵀ edge (w -> v) with w in the frontier decrements v
-        dec = jax.ops.segment_sum(
-            frontier[t_rows].astype(jnp.int32), t_indices, num_segments=n)
+        frontier_ = state["frontier"]
+        if sparse:
+            count = jnp.sum(frontier_)
+            edges = jnp.sum(jnp.where(frontier_, deg_in, 0))
+            sparse_ok = (count <= frontier.cap) & (edges <= frontier.ecap)
+            dec = jax.lax.cond(sparse_ok, sparse_dec, dense_dec, frontier_)
+        else:
+            dec = dense_dec(frontier_)
         counters_ = state["counters"] - dec
         newly = state["status"] & (counters_ <= 0)
         status = state["status"] & ~newly
@@ -88,7 +118,7 @@ def ac4_kernel(indptr, indices, t_indptr, t_indices, t_rows, worker_ids,
             # traversed edges: all in-edges of the frontier, attributed to
             # the worker that owns the propagating vertex (its Q_p)
             pw = per_worker_add(state["per_worker"],
-                                jnp.where(frontier, deg_in, 0),
+                                jnp.where(frontier_, deg_in, 0),
                                 worker_ids, workers)
             fsz = worker_counts(newly, worker_ids, workers)
             new["per_worker"] = pw
@@ -96,11 +126,15 @@ def ac4_kernel(indptr, indices, t_indptr, t_indices, t_rows, worker_ids,
         if instrument:
             # round r processes the frontier that died in round r-1 (round 0
             # processes frontier0); edges = Σ_{w∈frontier} indeg(w) = Σ dec
-            new["stats"] = obs.stats_record(
-                state["stats"], state["rounds"],
-                r_frontier=jnp.sum(frontier),
-                r_edges=jnp.sum(jnp.where(frontier, deg_in, 0)),
+            # — charged identically on the dense and compacted paths
+            vals = dict(
+                r_frontier=jnp.sum(frontier_),
+                r_edges=jnp.sum(jnp.where(frontier_, deg_in, 0)),
                 r_decrements=jnp.sum(jnp.where(state["status"], dec, 0)))
+            if sparse:
+                vals["r_sparse"] = sparse_ok.astype(jnp.int32)
+            new["stats"] = obs.stats_record(state["stats"], state["rounds"],
+                                            **vals)
         return new
 
     init = dict(
@@ -114,7 +148,8 @@ def ac4_kernel(indptr, indices, t_indptr, t_indices, t_rows, worker_ids,
         init["per_worker"] = per_worker0
         init["max_qp"] = jnp.max(fsz0)
     if instrument:
-        stats0 = obs.stats_init(max_rounds, _STAT_NAMES)
+        names = _STAT_NAMES + (("r_sparse",) if sparse else ())
+        stats0 = obs.stats_init(max_rounds, names)
         if count_init_scan:  # the AC4 degree-counting scan is round-0 work
             stats0 = obs.stats_record(stats0, jnp.int32(0),
                                       r_edges=jnp.sum(deg_out))
@@ -128,14 +163,15 @@ def ac4_kernel(indptr, indices, t_indptr, t_indices, t_rows, worker_ids,
 
 def _run_ac4(graph_arrays, transpose_arrays, worker_ids, workers, active, *,
              probe, window, use_kernel, counters, count_init_scan,
-             instrument=False, max_rounds=0):
-    del probe, window, use_kernel  # AC-4 never probes (counter-based)
+             frontier=FrontierPlan(), instrument=False, max_rounds=0):
+    del probe, window  # AC-4 never probes (counter-based)
     indptr, indices = graph_arrays
     t_indptr, t_indices, t_rows = transpose_arrays
     return ac4_kernel(
         indptr, indices, t_indptr, t_indices, t_rows, worker_ids, workers,
         count_init_scan=count_init_scan, active=active, counters=counters,
-        instrument=instrument, max_rounds=max_rounds)
+        use_kernel=use_kernel, frontier=frontier, instrument=instrument,
+        max_rounds=max_rounds)
 
 
 register_kernel(KernelSpec(

@@ -20,9 +20,64 @@ carried inside the loop state so benchmarks read exact, deterministic values
 from __future__ import annotations
 
 from functools import partial
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+
+FRONTIER_MODES = ("auto", "dense", "sparse")
+
+
+def _pow2(x: int) -> int:
+    # local copy (core.graph and obs carry one too): common sits below both
+    return 1 if x <= 1 else 1 << (int(x) - 1).bit_length()
+
+
+class FrontierPlan(NamedTuple):
+    """Static sparse-frontier configuration, resolved once at plan time
+    (DESIGN.md §12) and baked into the compiled fixpoint.
+
+    mode: "dense"  — every round runs the existing dense O(n)/O(m) body.
+          "auto"   — each round switches on-device (``lax.cond``): rounds
+                     whose frontier fits ``cap`` members and ``ecap``
+                     expanded edges take the compacted path, the rest stay
+                     dense.  Results are bit-identical either way.
+          "sparse" — capacities cover the whole graph, so every round
+                     compacts (the parity-test configuration).
+    cap:  static member capacity of the compacted id buffer (pow2).
+    ecap: static capacity of the expanded edge buffer (pow2).
+
+    The tuple is hashable, so it keys the engines' lru-cached runners and
+    rides into ``jax.jit`` as a static argument — switching direction
+    never changes carry shapes and never retraces.
+    """
+
+    mode: str = "dense"
+    cap: int = 0
+    ecap: int = 0
+
+
+def frontier_plan(mode: str, n: int, m: int) -> FrontierPlan:
+    """Resolve a ``frontier=`` argument into a static :class:`FrontierPlan`.
+
+    "auto" sizes the member capacity at ~n/64 (clamped to [128, n],
+    pow2-padded) — the compacted round's cost scales with the *capacity*,
+    not the live frontier, so the buffer must stay far below n for the
+    sparse path to win — and the edge capacity at ~m/8: the expansion
+    path is scatter-bound on both sides, so an 8x smaller buffer is an
+    ~8x cheaper round whenever it triggers.  Degenerate graphs (no
+    vertices or no edges) never reach a kernel, so they plan dense.
+    """
+    if mode not in FRONTIER_MODES:
+        raise ValueError(f"unknown frontier mode {mode!r}; expected one of "
+                         f"{FRONTIER_MODES}")
+    if mode == "dense" or n == 0 or m == 0:
+        return FrontierPlan("dense", 0, 0)
+    if mode == "sparse":
+        return FrontierPlan("sparse", _pow2(n), _pow2(m))
+    cap = _pow2(min(max(n // 64, 128), n))
+    ecap = _pow2(min(max(m // 8, 128), m))
+    return FrontierPlan("auto", cap, ecap)
 
 
 def probe_first_live(status, indptr, indices, start, scanning):
@@ -74,6 +129,52 @@ def probe_first_live(status, indptr, indices, start, scanning):
     ptr, _, found = jax.lax.while_loop(cond, body, (ptr0, active0, found0))
     # entries examined: positions start..ptr inclusive when found,
     # start..deg-1 when exhausted  ->  (ptr - start) + found
+    probes = jnp.where(scanning, ptr - start + found.astype(jnp.int32), 0)
+    return found, ptr, probes
+
+
+def probe_first_live_ids(status, indices, row_base, deg, start, scanning):
+    """Compacted-row variant of :func:`probe_first_live`: probe only the
+    ``C`` rows a frontier compaction selected, through *gathered* CSR row
+    descriptors instead of the full (n,) arrays.
+
+    Args:
+      status:   (n,) bool liveness snapshot (gathers stay n-wide).
+      indices:  (m,) int32 CSR adjacency.
+      row_base: (C,) int32 — ``indptr[v]`` of each compacted row.
+      deg:      (C,) int32 — degree of each compacted row (0 for the
+                sentinel slots a short frontier leaves unused).
+      start:    (C,) int32 relative scan position to probe first.
+      scanning: (C,) bool — which compacted slots participate.
+
+    Same contract as :func:`probe_first_live` (found/pos/probes, pointers
+    never retreat, every entry examined at most once), so a sparse round
+    built on it is bit-identical to the dense round — including the
+    traversed-edge counters.
+    """
+    m = indices.shape[0]
+    start = jnp.minimum(start, deg)
+
+    def cond(state):
+        ptr, active, found = state
+        return jnp.any(active)
+
+    def body(state):
+        ptr, active, found = state
+        in_range = ptr < deg
+        addr = jnp.clip(row_base + ptr, 0, max(m - 1, 0))
+        target = indices[addr]
+        hit = active & in_range & status[target]
+        found = found | hit
+        advance = active & in_range & ~hit
+        ptr = jnp.where(advance, ptr + 1, ptr)
+        active = active & ~hit & (ptr < deg)
+        return ptr, active, found
+
+    ptr0 = jnp.where(scanning, start, deg)
+    active0 = scanning & (ptr0 < deg)
+    found0 = jnp.logical_and(scanning, False)
+    ptr, _, found = jax.lax.while_loop(cond, body, (ptr0, active0, found0))
     probes = jnp.where(scanning, ptr - start + found.astype(jnp.int32), 0)
     return found, ptr, probes
 

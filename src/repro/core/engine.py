@@ -47,6 +47,7 @@ from .. import obs
 from . import ac3 as _ac3  # noqa: F401  (imports register the kernels)
 from . import ac4 as _ac4  # noqa: F401
 from . import ac6 as _ac6  # noqa: F401
+from .common import FrontierPlan, frontier_plan
 from .enginebase import _TRACE_COUNT, EngineBase
 from .graph import CSRGraph, TrimResult, row_ids, worker_of
 from .registry import available_methods, get_kernel
@@ -57,15 +58,18 @@ BACKENDS = ("dense", "windowed", "sharded")
 @functools.lru_cache(maxsize=None)
 def _local_runner(method: str, probe: str, window: int,
                   use_kernel, counters: bool, workers: int, batched: bool,
+                  fplan: FrontierPlan = FrontierPlan(),
                   instrument: bool = False, max_rounds: int = 0):
     """Shared jitted adapter for the dense/windowed backends.
 
     Cached process-wide on the static configuration so two engines over
     same-shaped graphs (e.g. the SCC driver's forward and backward passes —
     Gᵀ has exactly G's shape) share one compiled executable.
-    ``instrument``/``max_rounds`` select the stats-carrying kernel variant
-    (DESIGN.md §11); un-instrumented plans keep their own cache entries, so
-    turning instrumentation on elsewhere never retraces them.
+    ``fplan`` (a hashable :class:`~repro.core.common.FrontierPlan`) keys
+    the sparse-frontier variant; ``instrument``/``max_rounds`` select the
+    stats-carrying kernel variant (DESIGN.md §11); un-instrumented plans
+    keep their own cache entries, so turning instrumentation on elsewhere
+    never retraces them.
     """
     import jax
 
@@ -76,7 +80,8 @@ def _local_runner(method: str, probe: str, window: int,
         return spec.run((indptr, indices), tarrs, worker_ids, workers,
                         active, probe=probe, window=window,
                         use_kernel=use_kernel, counters=counters,
-                        instrument=instrument, max_rounds=max_rounds)
+                        frontier=fplan, instrument=instrument,
+                        max_rounds=max_rounds)
 
     fn = call
     if batched:
@@ -88,7 +93,8 @@ def plan(graph: CSRGraph, method: str = "ac6", backend: str = "dense", *,
          workers: int = 1, chunk: int = 4096, window: int = 16,
          use_kernel: bool | None = None, transpose: CSRGraph | None = None,
          mesh=None, axis="workers", packed: bool = False,
-         unmasked: bool = False, instrument: bool = False,
+         unmasked: bool = False, frontier: str = "auto",
+         instrument: bool = False,
          max_rounds: int | None = None) -> "TrimEngine":
     """Build a :class:`TrimEngine` for ``graph``.
 
@@ -96,6 +102,16 @@ def plan(graph: CSRGraph, method: str = "ac6", backend: str = "dense", *,
     already holds it); ``mesh``/``axis``/``packed`` configure the sharded
     backend (``packed`` exchanges a uint32 bitmap instead of a bool status
     vector in the per-round collective).
+
+    ``frontier`` selects the sparse-frontier substrate (DESIGN.md §12):
+    ``"auto"`` (the default) lets each round switch on-device between the
+    dense body and a compacted one sized at plan time
+    (:func:`~repro.core.common.frontier_plan`); ``"dense"`` pins the
+    historical dense rounds; ``"sparse"`` sizes the buffers to cover the
+    whole graph so every round compacts (the parity-test configuration).
+    Results are bit-identical across all three.  Methods without a sparse
+    formulation (AC-3) and the sharded backend degrade ``"auto"`` to dense
+    and reject ``"sparse"``.
 
     ``unmasked=True`` declares that the caller will never pass
     ``active`` masks.  It is required for configurations that cannot trim
@@ -115,8 +131,8 @@ def plan(graph: CSRGraph, method: str = "ac6", backend: str = "dense", *,
     return TrimEngine(graph, method=method, backend=backend, workers=workers,
                       chunk=chunk, window=window, use_kernel=use_kernel,
                       transpose=transpose, mesh=mesh, axis=axis,
-                      packed=packed, unmasked=unmasked, instrument=instrument,
-                      max_rounds=max_rounds)
+                      packed=packed, unmasked=unmasked, frontier=frontier,
+                      instrument=instrument, max_rounds=max_rounds)
 
 
 class TrimEngine(EngineBase):
@@ -126,11 +142,24 @@ class TrimEngine(EngineBase):
 
     def __init__(self, graph, *, method, backend, workers, chunk, window,
                  use_kernel, transpose, mesh, axis, packed,
-                 unmasked=False, instrument=False, max_rounds=None):
+                 unmasked=False, frontier="auto", instrument=False,
+                 max_rounds=None):
         self.spec = get_kernel(method)   # raises on unknown method
         if backend not in BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; expected one of "
                              f"{BACKENDS}")
+        if frontier == "sparse" and not self.spec.supports_frontier:
+            raise ValueError(
+                f"method {method!r} has no sparse-frontier formulation "
+                "(it re-checks every live vertex each round); use "
+                "frontier='auto'/'dense' or a counter/support method")
+        if frontier == "sparse" and backend == "sharded":
+            raise ValueError(
+                "frontier='sparse' is single-device (compaction is a "
+                "global scan); use the dense or windowed backend, or "
+                "frontier='auto' which degrades to dense when sharded")
+        if not self.spec.supports_frontier or backend == "sharded":
+            frontier = "dense"  # silent degrade for "auto"
         if backend == "sharded" and self.spec.sharded_method is None:
             raise ValueError(f"method {method!r} has no sharded kernels")
         if backend == "sharded" and self.spec.sharded_method == "ac4" \
@@ -163,6 +192,7 @@ class TrimEngine(EngineBase):
         self.axis = axis
         self.packed = packed
         self.unmasked = unmasked
+        self.fplan = frontier_plan(frontier, graph.n, graph.m)
         self.instrument = instrument
         self.max_rounds = (obs.round_capacity(graph.n, max_rounds)
                            if instrument else 0)
@@ -173,6 +203,8 @@ class TrimEngine(EngineBase):
     def plan_signature(self) -> str:
         sig = (f"trim[{self.method}/{self.backend}]"
                f"(n={self.graph.n},m={self.graph.m},w={self.workers})")
+        if self.fplan.mode != "dense":
+            sig += f"+frontier[{self.fplan.mode}]"
         return sig + "+stats" if self.instrument else sig
 
     # -- cached resources --------------------------------------------------
@@ -222,7 +254,8 @@ class TrimEngine(EngineBase):
                else jnp.asarray(active, bool))
         fn = _local_runner(self.method, self._probe_kind(), self.window,
                            self.use_kernel, counters, self.workers,
-                           batched=False, instrument=self.instrument,
+                           batched=False, fplan=self.fplan,
+                           instrument=self.instrument,
                            max_rounds=self.max_rounds)
         status, rounds, pw, max_qp, stats = self._dispatch(
             fn, self.graph.indptr, self.graph.indices,
@@ -269,9 +302,13 @@ class TrimEngine(EngineBase):
                     masks.sum(axis=1, dtype=jnp.int32) if counters else None,
                     self._degenerate_stats(masks) if self.instrument
                     else None)
+        # vmap lowers lax.cond to select (both branches execute every
+        # round), so the direction switch would only add work — batched
+        # dispatch always runs the dense rounds (results are identical)
         fn = _local_runner(self.method, self._probe_kind(), self.window,
                            self.use_kernel, counters, self.workers,
-                           batched=True, instrument=self.instrument,
+                           batched=True, fplan=FrontierPlan(),
+                           instrument=self.instrument,
                            max_rounds=self.max_rounds)
         status, rounds, pw, max_qp, stats = self._dispatch(
             fn, self.graph.indptr, self.graph.indices,
@@ -306,10 +343,14 @@ class TrimEngine(EngineBase):
     # -- degenerate paths (no kernel dispatch, still device-resident) ------
     def _stat_names(self):
         """Stat buffer names this plan's kernel would carry (counter-based
-        methods additionally track decrements)."""
-        return (("r_frontier", "r_edges", "r_decrements")
-                if self.method.startswith("ac4")
-                else ("r_frontier", "r_edges"))
+        methods additionally track decrements; non-dense frontier plans
+        record which rounds took the compacted path)."""
+        names = (("r_frontier", "r_edges", "r_decrements")
+                 if self.method.startswith("ac4")
+                 else ("r_frontier", "r_edges"))
+        if self.fplan.mode != "dense":
+            names = names + ("r_sparse",)
+        return names
 
     def _degenerate_stats(self, masks):
         """Round stats for the no-dispatch paths: every active vertex dies

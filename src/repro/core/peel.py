@@ -51,6 +51,7 @@ import functools
 import numpy as np
 
 from .. import obs
+from .common import FrontierPlan, frontier_plan
 from .enginebase import _TRACE_COUNT, EngineBase
 from .graph import CSRGraph, row_ids
 from .registry import KernelSpec, get_kernel, register_kernel
@@ -64,6 +65,7 @@ _STAT_NAMES = ("r_frontier", "r_edges", "r_k")
 
 def peel_bucket_kernel(indptr, indices, t_indptr, t_indices, t_rows,
                        active, *, k_stop, use_kernel,
+                       frontier: FrontierPlan = FrontierPlan(),
                        instrument: bool = False, max_rounds: int = 0):
     """Bucketed out-degree peeling to the coreness fixpoint.
 
@@ -83,6 +85,13 @@ def peel_bucket_kernel(indptr, indices, t_indptr, t_indices, t_rows,
     bulk decrement, and the bucket level ``k`` peeled that round (``r_k``
     is a per-slot value, not an accumulation — meaningful only for runs
     within the round capacity).
+
+    ``frontier`` (DESIGN.md §12) selects the sparse-frontier substrate:
+    rounds whose bucket fits ``cap`` members and ``ecap`` Gᵀ edges
+    compact the bucket, expand only its in-edge rows, and scatter-add the
+    ``ecap``-bounded buffer instead of segment-summing all m transpose
+    edges.  The decrement vector is identical, so coreness, peel order,
+    and every stat stay bit-identical.
     """
     import jax
     import jax.numpy as jnp
@@ -94,6 +103,20 @@ def peel_bucket_kernel(indptr, indices, t_indptr, t_indices, t_rows,
     src = row_ids(indptr, indices.shape[0])
     live_edge = (active[src] & active[indices]).astype(jnp.int32)
     deg = jax.ops.segment_sum(live_edge, src, num_segments=n)
+    sparse = frontier.mode != "dense"
+    if sparse:
+        t_deg = t_indptr[1:] - t_indptr[:-1]
+
+    def dense_dec(f):
+        return jax.ops.segment_sum(f[t_rows].astype(jnp.int32),
+                                   t_indices, num_segments=n)
+
+    def sparse_dec(f):
+        ids, _ = kops.frontier_compact(f, frontier.cap)
+        _, tgt, _, valid = kops.sparse_expand(t_indptr, t_indices, ids,
+                                              frontier.ecap)
+        return jnp.zeros((n,), jnp.int32).at[
+            jnp.where(valid, tgt, n)].add(1, mode="drop")
 
     def cond(s):
         if k_stop is None:
@@ -105,24 +128,30 @@ def peel_bucket_kernel(indptr, indices, t_indptr, t_indices, t_rows,
         # jump to the next occupied bucket; never retreats below a cascade
         minc = jnp.min(jnp.where(alive, counters, _INT32_MAX))
         k = jnp.maximum(s["k"], minc)
-        frontier = kops.bucket_peel(counters, alive, k,
-                                    use_kernel=use_kernel)
-        dec = jax.ops.segment_sum(frontier[t_rows].astype(jnp.int32),
-                                  t_indices, num_segments=n)
+        front = kops.bucket_peel(counters, alive, k,
+                                 use_kernel=use_kernel)
+        if sparse:
+            count = jnp.sum(front)
+            tedges = jnp.sum(jnp.where(front, t_deg, 0))
+            sparse_ok = (count <= frontier.cap) & (tedges <= frontier.ecap)
+            dec = jax.lax.cond(sparse_ok, sparse_dec, dense_dec, front)
+        else:
+            dec = dense_dec(front)
         new = dict(
-            alive=alive & ~frontier,
+            alive=alive & ~front,
             counters=counters - dec,
-            coreness=jnp.where(frontier, k, s["coreness"]),
-            peel_round=jnp.where(frontier, s["rounds"], s["peel_round"]),
+            coreness=jnp.where(front, k, s["coreness"]),
+            peel_round=jnp.where(front, s["rounds"], s["peel_round"]),
             k=k,
             rounds=s["rounds"] + 1,
         )
         if instrument:
-            new["stats"] = obs.stats_record(
-                s["stats"], s["rounds"],
-                r_frontier=jnp.sum(frontier),
-                r_edges=jnp.sum(dec),
-                r_k=k)
+            vals = dict(r_frontier=jnp.sum(front),
+                        r_edges=jnp.sum(dec),
+                        r_k=k)
+            if sparse:
+                vals["r_sparse"] = sparse_ok.astype(jnp.int32)
+            new["stats"] = obs.stats_record(s["stats"], s["rounds"], **vals)
         return new
 
     init = dict(
@@ -136,7 +165,8 @@ def peel_bucket_kernel(indptr, indices, t_indptr, t_indices, t_rows,
     if instrument:
         # the counter-initialization scan (one pass over every induced
         # edge, the AC-4 init) is round-0 work
-        stats0 = obs.stats_init(max_rounds, _STAT_NAMES)
+        names = _STAT_NAMES + (("r_sparse",) if sparse else ())
+        stats0 = obs.stats_init(max_rounds, names)
         init["stats"] = obs.stats_record(stats0, jnp.int32(0),
                                          r_edges=jnp.sum(deg))
     out = jax.lax.while_loop(cond, body, init)
@@ -149,12 +179,14 @@ def peel_bucket_kernel(indptr, indices, t_indptr, t_indices, t_rows,
 
 
 def _run_bucket(graph_arrays, transpose_arrays, active, *, k_stop,
-                use_kernel, instrument=False, max_rounds=0):
+                use_kernel, frontier=FrontierPlan(), instrument=False,
+                max_rounds=0):
     indptr, indices = graph_arrays
     t_indptr, t_indices, t_rows = transpose_arrays
     return peel_bucket_kernel(indptr, indices, t_indptr, t_indices, t_rows,
                               active, k_stop=k_stop, use_kernel=use_kernel,
-                              instrument=instrument, max_rounds=max_rounds)
+                              frontier=frontier, instrument=instrument,
+                              max_rounds=max_rounds)
 
 
 register_kernel(KernelSpec(name="bucket", run=_run_bucket,
@@ -163,10 +195,14 @@ register_kernel(KernelSpec(name="bucket", run=_run_bucket,
 
 @functools.lru_cache(maxsize=None)
 def _peel_runner(method: str, k_stop, use_kernel, batched: bool,
+                 fplan: FrontierPlan = FrontierPlan(),
                  instrument: bool = False, max_rounds: int = 0):
     """Shared jitted adapter, cached process-wide on the static
     configuration (DESIGN.md §1); each distinct ``k`` bound is its own
     compiled variant (the early-exit condition is static).
+    ``fplan`` (DESIGN.md §12) bakes the sparse-frontier capacities in;
+    the engine hands the dense plan in when ``batched`` (vmap lowers the
+    direction cond to a select that would run both bodies).
     ``instrument``/``max_rounds`` select the stats-carrying variant."""
     import jax
 
@@ -175,8 +211,8 @@ def _peel_runner(method: str, k_stop, use_kernel, batched: bool,
     def call(garrs, tarrs, active):
         _TRACE_COUNT[0] += 1  # runs at trace time only
         return spec.run(garrs, tarrs, active, k_stop=k_stop,
-                        use_kernel=use_kernel, instrument=instrument,
-                        max_rounds=max_rounds)
+                        use_kernel=use_kernel, frontier=fplan,
+                        instrument=instrument, max_rounds=max_rounds)
 
     fn = call
     if batched:
@@ -301,7 +337,8 @@ class PeelResult:
 
 def plan_peel(graph: CSRGraph, method: str = "bucket", *,
               use_kernel: bool | None = None,
-              transpose: CSRGraph | None = None, instrument: bool = False,
+              transpose: CSRGraph | None = None, frontier: str = "auto",
+              instrument: bool = False,
               max_rounds: int | None = None) -> "PeelEngine":
     """Build a :class:`PeelEngine` for ``graph``.
 
@@ -309,16 +346,18 @@ def plan_peel(graph: CSRGraph, method: str = "bucket", *,
     :class:`~repro.core.engine.TrimEngine` over the same graph, whose
     AC-4 pass needs the identical arrays).  ``use_kernel`` forces the
     bucket-extraction Pallas kernel on/off (default: on iff a TPU is
-    attached, like every ``kernels.ops`` wrapper).  ``instrument``
-    attaches per-round stats to every result (DESIGN.md §11; zero cost
-    when off).  Full-coreness peels can take up to n rounds — pass
-    ``max_rounds`` to widen the stat buffers past the 1024-slot default
-    if the per-round breakdown of a deep peel matters (totals are exact
-    either way).
+    attached, like every ``kernels.ops`` wrapper).  ``frontier``
+    (DESIGN.md §12) selects the sparse-frontier substrate — "auto"
+    (default) switches per round on device; ``run_batch`` always executes
+    dense (vmap lowers the switch to a select).  ``instrument`` attaches
+    per-round stats to every result (DESIGN.md §11; zero cost when off).
+    Full-coreness peels can take up to n rounds — pass ``max_rounds`` to
+    widen the stat buffers past the 1024-slot default if the per-round
+    breakdown of a deep peel matters (totals are exact either way).
     """
     return PeelEngine(graph, method=method, use_kernel=use_kernel,
-                      transpose=transpose, instrument=instrument,
-                      max_rounds=max_rounds)
+                      transpose=transpose, frontier=frontier,
+                      instrument=instrument, max_rounds=max_rounds)
 
 
 class PeelEngine(EngineBase):
@@ -328,11 +367,12 @@ class PeelEngine(EngineBase):
     family = "peel"
 
     def __init__(self, graph, *, method, use_kernel, transpose,
-                 instrument=False, max_rounds=None):
+                 frontier="auto", instrument=False, max_rounds=None):
         self.spec = get_kernel(method, family="peel")  # raises on unknown
         super().__init__(graph, transpose=transpose)
         self.method = method
         self.use_kernel = use_kernel
+        self.fplan = frontier_plan(frontier, graph.n, graph.m)
         self.instrument = instrument
         self.max_rounds = (obs.round_capacity(graph.n, max_rounds)
                            if instrument else 0)
@@ -340,7 +380,8 @@ class PeelEngine(EngineBase):
 
     def plan_signature(self) -> str:
         sig = (f"peel[{self.method}]"
-               f"(n={self.graph.n},m={self.graph.m})")
+               f"(n={self.graph.n},m={self.graph.m})"
+               f"+frontier[{self.fplan.mode}]")
         return sig + "+stats" if self.instrument else sig
 
     # -- cached resources --------------------------------------------------
@@ -379,7 +420,7 @@ class PeelEngine(EngineBase):
         if n == 0 or m == 0:
             return self._degenerate(act, k, batched=False)
         fn = _peel_runner(self.method, k, self.use_kernel, batched=False,
-                          instrument=self.instrument,
+                          fplan=self.fplan, instrument=self.instrument,
                           max_rounds=self.max_rounds)
         core, rnd, rounds, stats = self._dispatch(
             fn, (self.graph.indptr, self.graph.indices),
@@ -403,8 +444,10 @@ class PeelEngine(EngineBase):
                              f"{masks.shape}")
         if n == 0 or m == 0:
             return self._degenerate(masks, k, batched=True)
+        # vmap lowers the per-round direction cond to a select that runs
+        # BOTH bodies every round, so batched peels always execute dense
         fn = _peel_runner(self.method, k, self.use_kernel, batched=True,
-                          instrument=self.instrument,
+                          fplan=FrontierPlan(), instrument=self.instrument,
                           max_rounds=self.max_rounds)
         core, rnd, rounds, stats = self._dispatch(
             fn, (self.graph.indptr, self.graph.indices),

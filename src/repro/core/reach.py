@@ -44,6 +44,7 @@ import functools
 import numpy as np
 
 from .. import obs
+from .common import FrontierPlan, frontier_plan
 from .enginebase import _TRACE_COUNT, EngineBase
 from .graph import CSRGraph, row_ids
 from .registry import KernelSpec, get_kernel, register_kernel
@@ -56,9 +57,18 @@ _STAT_NAMES = ("r_frontier", "r_edges")
 # -- kernels (family "reach") --------------------------------------------------
 
 def reach_push_kernel(indptr, indices, edge_src, seeds, active, *,
+                      frontier: FrontierPlan = FrontierPlan(),
                       instrument: bool = False, max_rounds: int = 0):
     """Forward reachability by per-edge scatter (one dense O(m) pass per
     BSP round).  ``rounds`` counts frontier expansions executed.
+
+    ``frontier`` (DESIGN.md §12) selects the sparse-frontier substrate:
+    rounds whose frontier fits ``cap`` members and ``ecap`` out-edges
+    compact the frontier (``kernels.frontier_compact``), expand only its
+    CSR rows (``kernels.sparse_expand``), and scatter the ``ecap``-bounded
+    edge buffer instead of all m edges — the hit mask is identical, so
+    the sweep is bit-identical to the dense path including the round
+    stats (the edge charge is the frontier's out-degree sum either way).
 
     ``instrument`` (DESIGN.md §11) carries per-round ``(max_rounds,)``
     buffers — frontier size and out-edges of the frontier per expansion —
@@ -66,31 +76,54 @@ def reach_push_kernel(indptr, indices, edge_src, seeds, active, *,
     import jax
     import jax.numpy as jnp
 
+    from ..kernels import ops as kops
+
     n = indptr.shape[0] - 1
     deg = indptr[1:] - indptr[:-1]
     visited0 = seeds & active
+    sparse = frontier.mode != "dense"
+
+    def dense_hits(f):
+        edge_hit = f[edge_src]                             # (m,) bool
+        return jnp.zeros((n,), bool).at[indices].max(edge_hit)
+
+    def sparse_hits(f):
+        ids, _ = kops.frontier_compact(f, frontier.cap)
+        _, tgt, _, valid = kops.sparse_expand(indptr, indices, ids,
+                                              frontier.ecap)
+        return jnp.zeros((n,), bool).at[
+            jnp.where(valid, tgt, n)].max(valid, mode="drop")
 
     def cond(state):
         return jnp.any(state["frontier"])
 
     def body(state):
-        visited, frontier = state["visited"], state["frontier"]
-        edge_hit = frontier[edge_src]                      # (m,) bool
-        hit = jnp.zeros((n,), bool).at[indices].max(edge_hit)
+        visited, front = state["visited"], state["frontier"]
+        if sparse:
+            count = jnp.sum(front)
+            edges = jnp.sum(jnp.where(front, deg, 0))
+            sparse_ok = (count <= frontier.cap) & (edges <= frontier.ecap)
+            hit = jax.lax.cond(sparse_ok, sparse_hits, dense_hits, front)
+        else:
+            hit = dense_hits(front)
         new = hit & active & ~visited
         out = dict(visited=visited | new, frontier=new,
                    rounds=state["rounds"] + 1)
         if instrument:
+            vals = dict(r_frontier=jnp.sum(front),
+                        r_edges=(edges if sparse else
+                                 jnp.sum(jnp.where(front, deg, 0))))
+            if sparse:
+                vals["r_sparse"] = sparse_ok.astype(jnp.int32)
             out["stats"] = obs.stats_record(
-                state["stats"], state["rounds"],
-                r_frontier=jnp.sum(frontier),
-                r_edges=jnp.sum(jnp.where(frontier, deg, 0)))
+                state["stats"], state["rounds"], **vals)
         return out
 
     init = dict(visited=visited0, frontier=visited0,
                 rounds=jnp.array(0, jnp.int32))
     if instrument:
-        init["stats"] = obs.stats_init(max_rounds, _STAT_NAMES)
+        names = _STAT_NAMES + (("r_sparse",) if sparse else ())
+        init["stats"] = obs.stats_init(max_rounds, names)
     out = jax.lax.while_loop(cond, body, init)
     return (out["visited"], out["rounds"],
             out["stats"] if instrument else None)
@@ -98,8 +131,9 @@ def reach_push_kernel(indptr, indices, edge_src, seeds, active, *,
 
 def reach_pull_kernel(t_indptr, t_indices, seeds, active, *,
                       window: int, use_kernel, batched: bool = False,
-                      overflow: bool = True, instrument: bool = False,
-                      max_rounds: int = 0):
+                      overflow: bool = True, fwd=None,
+                      frontier: FrontierPlan = FrontierPlan(),
+                      instrument: bool = False, max_rounds: int = 0):
     """Forward reachability by pull over in-neighbors (Gᵀ).
 
     Two statically-chosen round bodies:
@@ -125,6 +159,17 @@ def reach_pull_kernel(t_indptr, t_indices, seeds, active, *,
     every round *on top of* the tile.  Hence the static choice: batched
     execution on an overflowing graph uses the whole-row body directly;
     everything else uses the tile (+ gated fallback only where needed).
+
+    ``frontier`` (DESIGN.md §12) adds a third, sparse round body gated by
+    a per-round ``lax.cond``: when the frontier fits ``cap`` members and
+    ``ecap`` *out*-edges, its forward CSR rows (``fwd`` = the G arrays;
+    required for non-dense plans) are expanded and scattered — push-shaped
+    work on a pull engine, sound because "v has an in-neighbor on the
+    frontier" and "some frontier out-edge lands on v" are the same
+    predicate, so the visited evolution is bit-identical.  The ``r_edges``
+    charge of a sparse-taken round is the frontier's *forward* degree sum
+    (the work actually done), not the pull-side tile charge — the one
+    per-round stat that is path-dependent (``r_frontier`` stays exact).
     """
     import jax
     import jax.numpy as jnp
@@ -133,6 +178,14 @@ def reach_pull_kernel(t_indptr, t_indices, seeds, active, *,
 
     m = t_indices.shape[0]
     t_deg = t_indptr[1:] - t_indptr[:-1]
+    n = t_indptr.shape[0] - 1
+    sparse = frontier.mode != "dense"
+    if sparse and fwd is None:
+        raise ValueError("sparse-frontier pull needs the forward CSR "
+                         "arrays (fwd=(indptr, indices))")
+    if sparse:
+        f_indptr, f_indices = fwd
+        f_deg = f_indptr[1:] - f_indptr[:-1]
     # overflow-free graphs have m <= n*W, so the tile is never worse than
     # the whole-row body; only batched+overflow must avoid it (see above)
     use_tile = not (batched and overflow)
@@ -144,8 +197,8 @@ def reach_pull_kernel(t_indptr, t_indices, seeds, active, *,
         win_sources = t_indices[addr]                      # (n, W), static
     visited0 = seeds & active
 
-    def row_hits(frontier):
-        edge_hit = frontier[t_indices].astype(jnp.int32)   # (m,)
+    def row_hits(frontier_):
+        edge_hit = frontier_[t_indices].astype(jnp.int32)  # (m,)
         csum = jnp.concatenate(
             [jnp.zeros((1,), jnp.int32), jnp.cumsum(edge_hit)])
         return (csum[t_indptr[1:]] - csum[t_indptr[:-1]]) > 0
@@ -154,47 +207,71 @@ def reach_pull_kernel(t_indptr, t_indices, seeds, active, *,
         return jnp.any(state["frontier"])
 
     def body(state):
-        visited, frontier = state["visited"], state["frontier"]
+        visited, front = state["visited"], state["frontier"]
         pending = active & ~visited
-        edges = None
-        if use_tile:
-            flags = frontier[win_sources]                  # (n, W) bool
-            hit_w = kops.frontier_expand(flags, valid, pending,
-                                         use_kernel=use_kernel)
-            if overflow:
-                # continuation: in-degree beyond the window, nothing
-                # found yet
-                rest = pending & ~hit_w & (t_deg > window)
-                found_r = jax.lax.cond(
-                    jnp.any(rest), lambda f: rest & row_hits(f),
-                    lambda _: jnp.zeros_like(rest), frontier)
-                new = hit_w | found_r
-                if instrument:
-                    # tile gathers min(deg, W) per pending vertex; the
-                    # gated whole-row continuation is an O(m) pass
-                    edges = (jnp.sum(jnp.where(
-                        pending, jnp.minimum(t_deg, window), 0))
-                        + jnp.where(jnp.any(rest), m, 0))
+
+        def dense_new(f):
+            edges = jnp.int32(0)
+            if use_tile:
+                flags = f[win_sources]                     # (n, W) bool
+                hit_w = kops.frontier_expand(flags, valid, pending,
+                                             use_kernel=use_kernel)
+                if overflow:
+                    # continuation: in-degree beyond the window, nothing
+                    # found yet
+                    rest = pending & ~hit_w & (t_deg > window)
+                    found_r = jax.lax.cond(
+                        jnp.any(rest), lambda f_: rest & row_hits(f_),
+                        lambda _: jnp.zeros_like(rest), f)
+                    new = hit_w | found_r
+                    if instrument:
+                        # tile gathers min(deg, W) per pending vertex; the
+                        # gated whole-row continuation is an O(m) pass
+                        edges = (jnp.sum(jnp.where(
+                            pending, jnp.minimum(t_deg, window), 0))
+                            + jnp.where(jnp.any(rest), m, 0))
+                else:
+                    new = hit_w    # no vertex overflows the window: exact
+                    if instrument:
+                        edges = jnp.sum(jnp.where(pending, t_deg, 0))
             else:
-                new = hit_w    # no vertex overflows the window: exact
+                new = pending & row_hits(f)
                 if instrument:
-                    edges = jnp.sum(jnp.where(pending, t_deg, 0))
+                    # whole-row OR: O(m) pass
+                    edges = jnp.array(m, jnp.int32)
+            return new, edges
+
+        def sparse_new(f):
+            ids, _ = kops.frontier_compact(f, frontier.cap)
+            _, tgt, _, valid_e = kops.sparse_expand(
+                f_indptr, f_indices, ids, frontier.ecap)
+            hit = jnp.zeros((n,), bool).at[
+                jnp.where(valid_e, tgt, n)].max(valid_e, mode="drop")
+            return pending & hit, jnp.sum(jnp.where(f, f_deg, 0))
+
+        if sparse:
+            count = jnp.sum(front)
+            fedges = jnp.sum(jnp.where(front, f_deg, 0))
+            sparse_ok = (count <= frontier.cap) & (fedges <= frontier.ecap)
+            new, edges = jax.lax.cond(sparse_ok, sparse_new, dense_new,
+                                      front)
         else:
-            new = pending & row_hits(frontier)
-            if instrument:
-                edges = jnp.array(m, jnp.int32)  # whole-row OR: O(m) pass
+            new, edges = dense_new(front)
         out = dict(visited=visited | new, frontier=new,
                    rounds=state["rounds"] + 1)
         if instrument:
+            vals = dict(r_frontier=jnp.sum(front), r_edges=edges)
+            if sparse:
+                vals["r_sparse"] = sparse_ok.astype(jnp.int32)
             out["stats"] = obs.stats_record(
-                state["stats"], state["rounds"],
-                r_frontier=jnp.sum(frontier), r_edges=edges)
+                state["stats"], state["rounds"], **vals)
         return out
 
     init = dict(visited=visited0, frontier=visited0,
                 rounds=jnp.array(0, jnp.int32))
     if instrument:
-        init["stats"] = obs.stats_init(max_rounds, _STAT_NAMES)
+        names = _STAT_NAMES + (("r_sparse",) if sparse else ())
+        init["stats"] = obs.stats_init(max_rounds, names)
     out = jax.lax.while_loop(cond, body, init)
     return (out["visited"], out["rounds"],
             out["stats"] if instrument else None)
@@ -202,19 +279,22 @@ def reach_pull_kernel(t_indptr, t_indices, seeds, active, *,
 
 def _run_push(graph_arrays, transpose_arrays, seeds, active, *,
               window, use_kernel, batched=False, overflow=False,
-              instrument=False, max_rounds=0):
+              frontier=FrontierPlan(), instrument=False, max_rounds=0):
     indptr, indices, edge_src = graph_arrays
     return reach_push_kernel(indptr, indices, edge_src, seeds, active,
-                             instrument=instrument, max_rounds=max_rounds)
+                             frontier=frontier, instrument=instrument,
+                             max_rounds=max_rounds)
 
 
 def _run_pull(graph_arrays, transpose_arrays, seeds, active, *,
               window, use_kernel, batched=False, overflow=True,
-              instrument=False, max_rounds=0):
+              frontier=FrontierPlan(), instrument=False, max_rounds=0):
+    indptr, indices, _ = graph_arrays
     t_indptr, t_indices = transpose_arrays
     return reach_pull_kernel(t_indptr, t_indices, seeds, active,
                              window=window, use_kernel=use_kernel,
                              batched=batched, overflow=overflow,
+                             fwd=(indptr, indices), frontier=frontier,
                              instrument=instrument, max_rounds=max_rounds)
 
 
@@ -229,13 +309,17 @@ register_kernel(KernelSpec(name="pull", run=_run_pull,
 
 @functools.lru_cache(maxsize=None)
 def _reach_runner(method: str, window: int, use_kernel, batched: bool,
-                  overflow: bool, instrument: bool = False,
-                  max_rounds: int = 0):
+                  overflow: bool, fplan: FrontierPlan = FrontierPlan(),
+                  instrument: bool = False, max_rounds: int = 0):
     """Shared jitted adapter, cached process-wide on the static
     configuration (DESIGN.md §1): the SCC driver's FW engine (over G) and
     BW engine (over Gᵀ, same array shapes) share one compiled executable.
     ``overflow`` (any in-degree > window, a per-graph static fact) picks
     the pull method's round body — see :func:`reach_pull_kernel`.
+    ``fplan`` (hashable, DESIGN.md §12) bakes the sparse-frontier
+    capacities into the compiled sweep; the engine always hands the dense
+    plan in here when ``batched`` (vmap lowers the direction switch to a
+    select that would run both bodies).
     ``instrument``/``max_rounds`` select the stats-carrying variant
     (DESIGN.md §11); un-instrumented plans keep their own cache entries.
     """
@@ -247,8 +331,8 @@ def _reach_runner(method: str, window: int, use_kernel, batched: bool,
         _TRACE_COUNT[0] += 1  # runs at trace time only
         return spec.run(garrs, tarrs, seeds, active, window=window,
                         use_kernel=use_kernel, batched=batched,
-                        overflow=overflow, instrument=instrument,
-                        max_rounds=max_rounds)
+                        overflow=overflow, frontier=fplan,
+                        instrument=instrument, max_rounds=max_rounds)
 
     fn = call
     if batched:
@@ -319,19 +403,25 @@ class ReachResult:
 
 def plan_reach(graph: CSRGraph, backend: str = "dense", *,
                window: int = 16, use_kernel: bool | None = None,
-               transpose: CSRGraph | None = None, instrument: bool = False,
+               transpose: CSRGraph | None = None, frontier: str = "auto",
+               instrument: bool = False,
                max_rounds: int | None = None) -> "ReachEngine":
     """Build a :class:`ReachEngine` for ``graph``.
 
     ``backend``: "dense" (push scatter) or "windowed" (pull through the
     ``frontier_expand`` Pallas kernel).  ``transpose`` pre-seeds the Gᵀ
     cache (the SCC driver hands the trim engine's transpose over, so one
-    FW-BW worklist builds Gᵀ exactly once).  ``instrument`` attaches
-    per-round stats to every result (DESIGN.md §11; zero cost when off).
+    FW-BW worklist builds Gᵀ exactly once).  ``frontier`` (DESIGN.md §12)
+    selects the sparse-frontier substrate — "auto" (default) switches
+    per round on device, "dense"/"sparse" pin a path; ``run_batch``
+    always executes dense (vmap lowers the switch to a select).
+    ``instrument`` attaches per-round stats to every result (DESIGN.md
+    §11; zero cost when off).
     """
     return ReachEngine(graph, backend=backend, window=window,
                        use_kernel=use_kernel, transpose=transpose,
-                       instrument=instrument, max_rounds=max_rounds)
+                       frontier=frontier, instrument=instrument,
+                       max_rounds=max_rounds)
 
 
 class ReachEngine(EngineBase):
@@ -341,7 +431,7 @@ class ReachEngine(EngineBase):
     family = "reach"
 
     def __init__(self, graph, *, backend, window, use_kernel, transpose,
-                 instrument=False, max_rounds=None):
+                 frontier="auto", instrument=False, max_rounds=None):
         if backend not in REACH_BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; expected one of "
                              f"{REACH_BACKENDS}")
@@ -351,6 +441,7 @@ class ReachEngine(EngineBase):
         self.spec = get_kernel(self.method, family="reach")
         self.window = window
         self.use_kernel = use_kernel
+        self.fplan = frontier_plan(frontier, graph.n, graph.m)
         self.instrument = instrument
         self.max_rounds = (obs.round_capacity(graph.n, max_rounds)
                            if instrument else 0)
@@ -360,7 +451,8 @@ class ReachEngine(EngineBase):
 
     def plan_signature(self) -> str:
         sig = (f"reach[{self.method}/{self.backend}]"
-               f"(n={self.graph.n},m={self.graph.m})")
+               f"(n={self.graph.n},m={self.graph.m})"
+               f"+frontier[{self.fplan.mode}]")
         return sig + "+stats" if self.instrument else sig
 
     # -- cached arrays -----------------------------------------------------
@@ -434,7 +526,7 @@ class ReachEngine(EngineBase):
                                round_stats=self._empty_stats(rounds))
         fn = _reach_runner(self.method, self.window, self.use_kernel,
                            batched=False, overflow=self._has_overflow(),
-                           instrument=self.instrument,
+                           fplan=self.fplan, instrument=self.instrument,
                            max_rounds=self.max_rounds)
         reached, rounds, stats = self._dispatch(
             fn, self._graph_arrays(), self._transpose_arrays(),
@@ -462,9 +554,11 @@ class ReachEngine(EngineBase):
             return ReachResult(mask=seeds & act, rounds=rounds,
                                round_stats=self._empty_stats(
                                    rounds, lanes=seeds.shape[0]))
+        # vmap lowers the per-round direction cond to a select that runs
+        # BOTH bodies every round, so batched sweeps always execute dense
         fn = _reach_runner(self.method, self.window, self.use_kernel,
                            batched=True, overflow=self._has_overflow(),
-                           instrument=self.instrument,
+                           fplan=FrontierPlan(), instrument=self.instrument,
                            max_rounds=self.max_rounds)
         reached, rounds, stats = self._dispatch(
             fn, self._graph_arrays(), self._transpose_arrays(), seeds, act)

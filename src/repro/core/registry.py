@@ -77,6 +77,13 @@ class KernelSpec:
                       and the windowed backend falls back to dense)
     sharded_method:   key into ``core.distributed``'s shard_map bodies,
                       or None if the method has no sharded implementation
+    supports_frontier: honors the sparse-frontier substrate (DESIGN.md
+                      §12) — the ``run`` adapter accepts a
+                      ``frontier=FrontierPlan(...)`` keyword.  AC-3
+                      registers False (it re-checks every live vertex each
+                      round, so there is no sparse set to compact);
+                      ``plan(frontier="sparse")`` raises for such methods
+                      and ``"auto"`` silently degrades to dense.
     """
 
     name: str
@@ -84,6 +91,7 @@ class KernelSpec:
     needs_transpose: bool = False
     supports_windowed: bool = False
     sharded_method: Optional[str] = None
+    supports_frontier: bool = True
 
 
 _REGISTRY: dict[tuple[str, str], KernelSpec] = {}

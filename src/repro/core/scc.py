@@ -96,32 +96,40 @@ def _trim2_runner():
     captivity is *not* sound (a fully-captive u merges into SCC(v), which
     may be larger), so only the two symmetric forms are used.
 
-    Degrees/neighbors come from four masked segment reductions over G and
-    Gᵀ edges: out/in live degree, and the unique live successor/
-    predecessor (a segment max, exact whenever the degree is 1 — the only
-    case it is read).  Returns ``(detected, partner)``: (B, n) bool and
-    (B, n) int32 (partner == index for singletons and undetected rows).
+    Degrees/neighbors come scatter-free from cumsum-difference row
+    reductions over G and Gᵀ (XLA CPU lowers a vmapped segment reduction
+    to B per-edge scatters, an order of magnitude slower than the two
+    prefix sums this needs): the live out/in degree is a row count, and
+    the unique live successor/predecessor falls out of the *sum* of live
+    targets per row — exact whenever the degree is 1, the only case it is
+    read (int32 wrap-around on fatter rows is never observed).  Returns
+    ``(detected, partner)``: (B, n) bool and (B, n) int32 (partner ==
+    index for singletons and undetected rows).
     """
     import jax
     import jax.numpy as jnp
 
-    def detect(src, dst, t_src, t_dst, live):
+    def rowsum(indptr, per_edge):
+        csum = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                                jnp.cumsum(per_edge)])
+        return csum[indptr[1:]] - csum[indptr[:-1]]
+
+    def detect(indptr, indices, t_indptr, t_indices, live):
         n = live.shape[0]
         idx = jnp.arange(n, dtype=jnp.int32)
-        le = live[src] & live[dst]
-        te = live[t_src] & live[t_dst]
-        outdeg = jax.ops.segment_sum(le.astype(jnp.int32), src,
-                                     num_segments=n)
-        indeg = jax.ops.segment_sum(te.astype(jnp.int32), t_src,
-                                    num_segments=n)
-        succ = jax.ops.segment_max(jnp.where(le, dst, -1), src,
-                                   num_segments=n)
-        pred = jax.ops.segment_max(jnp.where(te, t_dst, -1), t_src,
-                                   num_segments=n)
-        cap_out = live & (outdeg == 1)
+        # row v's live target count / target sum; the source-liveness
+        # factor of the original per-edge mask folds into the row-level
+        # ``live &`` below (rows of dead sources are never read)
+        lt = live[indices]
+        cnt_out = rowsum(indptr, lt.astype(jnp.int32))
+        succ = rowsum(indptr, jnp.where(lt, indices, 0))
+        ts = live[t_indices]
+        cnt_in = rowsum(t_indptr, ts.astype(jnp.int32))
+        pred = rowsum(t_indptr, jnp.where(ts, t_indices, 0))
+        cap_out = live & (cnt_out == 1)
         s = jnp.clip(succ, 0, n - 1)
         pair_out = cap_out & cap_out[s] & (succ[s] == idx)
-        cap_in = live & (indeg == 1)
+        cap_in = live & (cnt_in == 1)
         p = jnp.clip(pred, 0, n - 1)
         pair_in = cap_in & cap_in[p] & (pred[p] == idx)
         detected = pair_out | pair_in
@@ -137,7 +145,8 @@ def scc_decompose(graph: CSRGraph, use_trim: bool = True,
                   reach_backend: str = "windowed", window: int = 16,
                   counters: bool = False, max_batch: int = 1024,
                   active=None, trim2: bool = True, workers: int = 1,
-                  chunk: int = 4096, instrument: bool = False,
+                  chunk: int = 4096, frontier: str = "auto",
+                  instrument: bool = False,
                   max_rounds: int | None = None):
     """Return (labels, stats). labels: (n,) int64 component ids (dense).
 
@@ -190,6 +199,12 @@ def scc_decompose(graph: CSRGraph, use_trim: bool = True,
     over every trim pass, the quantity behind the paper's Fig. 4-style
     load-balance comparison (``benchmarks/bench_obs.py``).
 
+    ``frontier`` (DESIGN.md §12) is threaded to all four engine plans.
+    The driver's own dispatches are batched and therefore execute dense
+    regardless (vmap lowers the per-round direction cond to a select),
+    but the plans stay frontier-consistent with any single-region engines
+    the caller shares.
+
     ``instrument=True`` plans all four engines with round-level telemetry
     (DESIGN.md §11): ``stats["trim_rounds"]`` / ``stats["reach_rounds"]``
     accumulate total fixpoint rounds, and each generation emits an
@@ -224,27 +239,27 @@ def scc_decompose(graph: CSRGraph, use_trim: bool = True,
     if use_trim:
         fw_trim = plan(graph, method=trim_method, backend=trim_backend,
                        window=window, workers=workers, chunk=chunk,
-                       instrument=instrument, max_rounds=max_rounds)
+                       frontier=frontier, instrument=instrument,
+                       max_rounds=max_rounds)
         gt = fw_trim.transpose           # the one and only build
         bw_trim = plan(gt, method=trim_method, backend=trim_backend,
                        window=window, transpose=graph, workers=workers,
-                       chunk=chunk, instrument=instrument,
-                       max_rounds=max_rounds)
+                       chunk=chunk, frontier=frontier,
+                       instrument=instrument, max_rounds=max_rounds)
     else:
         fw_trim = bw_trim = None
         gt = graph.transpose()
     fw_reach = plan_reach(graph, backend=reach_backend, window=window,
-                          transpose=gt, instrument=instrument,
-                          max_rounds=max_rounds)
+                          transpose=gt, frontier=frontier,
+                          instrument=instrument, max_rounds=max_rounds)
     bw_reach = plan_reach(gt, backend=reach_backend, window=window,
-                          transpose=graph, instrument=instrument,
-                          max_rounds=max_rounds)
+                          transpose=graph, frontier=frontier,
+                          instrument=instrument, max_rounds=max_rounds)
     if trim2:
-        # G and Gᵀ edge arrays for the size-≤2 detector (device-resident,
+        # G and Gᵀ CSR arrays for the size-≤2 detector (device-resident,
         # shared across every generation); the Gᵀ pair reuses the one
         # transpose build above
-        t2_arrs = (graph.edge_sources(), graph.indices,
-                   gt.edge_sources(), gt.indices)
+        t2_arrs = (graph.indptr, graph.indices, gt.indptr, gt.indices)
         t2_fn = _trim2_runner()
 
     labels = jnp.full((n,), -1, jnp.int32)   # device-resident until the end

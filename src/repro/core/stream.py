@@ -49,6 +49,7 @@ import functools
 import numpy as np
 
 from .. import obs
+from .common import FrontierPlan, frontier_plan
 from .enginebase import _TRACE_COUNT, EngineBase
 from .graph import CSRGraph, DeltaCSR, TrimResult, _pow2, \
     _stable_counting_order, check_edge_ids
@@ -63,6 +64,7 @@ _STAT_NAMES = ("r_frontier", "r_edges", "r_decrements")
 
 def _run_stream_ac4(tarrs, overlay, state, updates, *, use_kernel,
                     full: bool, revivable: bool = True,
+                    frontier: FrontierPlan = FrontierPlan(),
                     instrument: bool = False, max_rounds: int = 0):
     """One apply step: structural overlay updates + counter maintenance +
     (incremental or from-scratch) AC-4 fixpoint, all in one dispatch.
@@ -87,6 +89,14 @@ def _run_stream_ac4(tarrs, overlay, state, updates, *, use_kernel,
              from scratch when an inserted arc leaves a dead source).
              Deletion-only batches are monotone and compile the fallback
              — including its counter re-initialization — out entirely.
+    frontier: static sparse-frontier plan (DESIGN.md §12).  Fixpoint
+             rounds whose delta frontier fits ``cap`` members and ``ecap``
+             Gᵀ edges compact the frontier, expand only its transpose
+             rows (tombstones masked through the expansion's edge
+             positions), and scatter-add the bounded buffer; the small
+             insert-buffer contribution stays a dense segment-sum either
+             way.  The decrement vector — and therefore the fixpoint and
+             every stat — is bit-identical to the dense path.
     instrument: static — thread per-round fixpoint telemetry (processed
              frontier size, live arcs traversed, counter decrements
              applied to live vertices; DESIGN.md §11) through the loop
@@ -163,14 +173,41 @@ def _run_stream_ac4(tarrs, overlay, state, updates, *, use_kernel,
     # segment-summed in
     ins_tgt = jnp.clip(ins_dst, 0, hi)
     ins_own = jnp.clip(ins_src, 0, hi)
+    sparse = frontier.mode != "dense"
+    if sparse:
+        t_deg = t_indptr[1:] - t_indptr[:-1]
+        mt = t_indices.shape[0]
+
+    def base_dec_dense(f):
+        return jax.ops.segment_sum((f[t_rows] & ~tomb_t).astype(jnp.int32),
+                                   t_indices, num_segments=n)
+
+    def base_dec_sparse(f):
+        # expand only the frontier's Gᵀ rows; a tombstoned base arc is
+        # masked through its expanded edge *position* (Gᵀ order), exactly
+        # the arcs ``~tomb_t`` drops from the dense segment-sum
+        ids, _ = kops.frontier_compact(f, frontier.cap)
+        _, tgt, pos, valid = kops.sparse_expand(t_indptr, t_indices, ids,
+                                                frontier.ecap)
+        if mt:          # an edgeless base (everything compacted away or
+            # inserted) expands to no valid slots — nothing to tombstone
+            valid = valid & ~tomb_t[jnp.clip(pos, 0, mt - 1)]
+        return jnp.zeros((n,), jnp.int32).at[
+            jnp.where(valid, tgt, n)].add(1, mode="drop")
 
     def cond(s):
         return jnp.any(s["frontier"])
 
     def body(s):
         f = s["frontier"]
-        dec = jax.ops.segment_sum((f[t_rows] & ~tomb_t).astype(jnp.int32),
-                                  t_indices, num_segments=n)
+        if sparse:
+            count = jnp.sum(f)
+            tedges = jnp.sum(jnp.where(f, t_deg, 0))
+            sparse_ok = (count <= frontier.cap) & (tedges <= frontier.ecap)
+            dec = jax.lax.cond(sparse_ok, base_dec_sparse, base_dec_dense,
+                               f)
+        else:
+            dec = base_dec_dense(f)
         dec = dec + jax.ops.segment_sum(
             (f[ins_tgt] & ins_alive).astype(jnp.int32), ins_own,
             num_segments=n)
@@ -179,11 +216,13 @@ def _run_stream_ac4(tarrs, overlay, state, updates, *, use_kernel,
         new = dict(status=s["status"] & ~newly_, counters=c,
                    frontier=newly_, rounds=s["rounds"] + 1)
         if instrument:
-            new["stats"] = obs.stats_record(
-                s["stats"], s["rounds"],
+            vals = dict(
                 r_frontier=jnp.sum(f),
                 r_edges=jnp.sum(dec),
                 r_decrements=jnp.sum(jnp.where(s["status"], dec, 0)))
+            if sparse:
+                vals["r_sparse"] = sparse_ok.astype(jnp.int32)
+            new["stats"] = obs.stats_record(s["stats"], s["rounds"], **vals)
         return new
 
     state0 = dict(status=status0, counters=counters0, frontier=frontier0,
@@ -195,8 +234,9 @@ def _run_stream_ac4(tarrs, overlay, state, updates, *, use_kernel,
                               jnp.int32)
         if not full:
             init_scan = jnp.where(dirty, init_scan, 0)
+        names = _STAT_NAMES + (("r_sparse",) if sparse else ())
         state0["stats"] = obs.stats_record(
-            obs.stats_init(max_rounds, _STAT_NAMES), jnp.int32(0),
+            obs.stats_init(max_rounds, names), jnp.int32(0),
             r_edges=init_scan)
     out = jax.lax.while_loop(cond, body, state0)
     return ((tomb, ins_src, ins_dst, ins_alive),
@@ -210,10 +250,12 @@ register_kernel(KernelSpec(name="ac4", run=_run_stream_ac4,
 
 @functools.lru_cache(maxsize=None)
 def _stream_runner(method: str, use_kernel, full: bool, revivable: bool,
+                   fplan: FrontierPlan = FrontierPlan(),
                    instrument: bool = False, max_rounds: int = 0):
     """Jitted apply step, cached process-wide on the static configuration
     (per method: from-scratch, deletion-only, and with-insertions
-    variants)."""
+    variants; ``fplan`` bakes the sparse-frontier capacities in,
+    DESIGN.md §12)."""
     import jax
 
     spec = get_kernel(method, family="stream")
@@ -222,8 +264,8 @@ def _stream_runner(method: str, use_kernel, full: bool, revivable: bool,
         _TRACE_COUNT[0] += 1  # runs at trace time only
         return spec.run(tarrs, overlay, state, updates,
                         use_kernel=use_kernel, full=full,
-                        revivable=revivable, instrument=instrument,
-                        max_rounds=max_rounds)
+                        revivable=revivable, frontier=fplan,
+                        instrument=instrument, max_rounds=max_rounds)
 
     return jax.jit(call)
 
@@ -285,6 +327,7 @@ def plan_stream(graph, method: str = "ac4", backend: str = "dense", *,
                 capacity: int | None = None,
                 load_factor: float | None = None,
                 use_kernel: bool | None = None,
+                frontier: str = "auto",
                 instrument: bool = False,
                 max_rounds: int | None = None) -> "StreamEngine":
     """Build a :class:`StreamEngine` over ``graph`` (a :class:`CSRGraph`
@@ -299,6 +342,12 @@ def plan_stream(graph, method: str = "ac4", backend: str = "dense", *,
     own sizing, so passing either kwarg with one raises rather than
     silently ignoring it.
 
+    ``frontier`` (DESIGN.md §12) selects the sparse-frontier substrate
+    for the incremental fixpoint — "auto" (default) switches per round on
+    device, so small delta cascades expand only the frontier's transpose
+    rows instead of segment-summing the whole overlay.  Capacities are
+    sized once from the base graph at plan time and survive compaction.
+
     ``instrument=True`` threads per-round fixpoint telemetry through
     every dispatch (DESIGN.md §11): each :class:`StreamResult` (and the
     ``retrim`` :class:`TrimResult`) carries a ``round_stats``
@@ -309,8 +358,8 @@ def plan_stream(graph, method: str = "ac4", backend: str = "dense", *,
     """
     return StreamEngine(graph, method=method, backend=backend,
                         capacity=capacity, load_factor=load_factor,
-                        use_kernel=use_kernel, instrument=instrument,
-                        max_rounds=max_rounds)
+                        use_kernel=use_kernel, frontier=frontier,
+                        instrument=instrument, max_rounds=max_rounds)
 
 
 class StreamEngine(EngineBase):
@@ -320,7 +369,8 @@ class StreamEngine(EngineBase):
     family = "stream"
 
     def __init__(self, graph, *, method, backend, capacity, load_factor,
-                 use_kernel, instrument=False, max_rounds=None):
+                 use_kernel, frontier="auto", instrument=False,
+                 max_rounds=None):
         self.spec = get_kernel(method, family="stream")
         if backend not in STREAM_BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; expected one "
@@ -341,6 +391,9 @@ class StreamEngine(EngineBase):
         self.method = method
         self.backend = backend
         self.use_kernel = use_kernel
+        # sized once from the base graph; compaction changes the
+        # representation, not the graph, so the plan stays valid
+        self.fplan = frontier_plan(frontier, delta.n, delta.m_base)
         self.instrument = bool(instrument)
         self.max_rounds = (obs.round_capacity(delta.n, max_rounds)
                            if self.instrument else 0)
@@ -359,7 +412,8 @@ class StreamEngine(EngineBase):
     def plan_signature(self) -> str:
         sig = (f"stream[{self.method}/{self.backend}]"
                f"(n={self.delta.n},m={self.delta.m_base},"
-               f"cap={self.delta.capacity})")
+               f"cap={self.delta.capacity})"
+               f"+frontier[{self.fplan.mode}]")
         return sig + "+stats" if self.instrument else sig
 
     # -- cached resources --------------------------------------------------
@@ -464,7 +518,7 @@ class StreamEngine(EngineBase):
         eids, slots_del = d.resolve_deletions(dsrc, ddst)
         slots_ins = d.stage_inserts(isrc, idst)
         fn = _stream_runner(self.method, self.use_kernel, full=False,
-                            revivable=bool(isrc.size),
+                            revivable=bool(isrc.size), fplan=self.fplan,
                             instrument=self.instrument,
                             max_rounds=self.max_rounds)
         overlay, state, rounds, dirty, stats = self._dispatch(
@@ -492,7 +546,7 @@ class StreamEngine(EngineBase):
         import jax.numpy as jnp
         if full and self.delta.n:
             fn = _stream_runner(self.method, self.use_kernel, full=True,
-                                revivable=False,
+                                revivable=False, fplan=self.fplan,
                                 instrument=self.instrument,
                                 max_rounds=self.max_rounds)
             z = np.zeros(0, np.int64)

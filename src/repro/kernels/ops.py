@@ -20,6 +20,8 @@ from . import ref
 from .bucket_peel import bucket_peel_pallas as _bpl
 from .counter_scatter import counter_scatter_pallas as _csc
 from .first_live_scan import first_live_scan as _fls
+from .frontier_compact import frontier_compact_pallas as _fcp
+from .frontier_compact import sparse_expand_pallas as _sxp
 from .frontier_expand import frontier_expand as _fex
 from .flash_attention import flash_attention as _fa
 from .segment_reduce import segment_sum_pallas as _ssp
@@ -80,6 +82,30 @@ def frontier_expand(flags, valid, pending, use_kernel: bool | None = None,
     if use_kernel:
         return _fex(flags, valid, pending, interpret=not on_tpu(), **kw)
     return ref.frontier_expand_ref(flags, valid, pending)
+
+
+def frontier_compact(mask, capacity: int, use_kernel: bool | None = None,
+                     **kw):
+    """(n,) bool -> (ids, count): frontier members compacted into a
+    static (capacity,) int32 buffer (sentinel n) + the member count."""
+    if use_kernel is None:
+        use_kernel = on_tpu()
+    obs.note_kernel("frontier_compact", use_kernel=bool(use_kernel))
+    if use_kernel:
+        return _fcp(mask, capacity, interpret=not on_tpu(), **kw)
+    return ref.frontier_compact_ref(mask, capacity)
+
+
+def sparse_expand(indptr, indices, ids, ecap: int,
+                  use_kernel: bool | None = None, **kw):
+    """CSR rows of compacted ``ids`` expanded into a static (ecap,) edge
+    buffer: ``(src, tgt, pos, valid)`` per slot."""
+    if use_kernel is None:
+        use_kernel = on_tpu()
+    obs.note_kernel("sparse_expand", use_kernel=bool(use_kernel))
+    if use_kernel:
+        return _sxp(indptr, indices, ids, ecap, interpret=not on_tpu(), **kw)
+    return ref.sparse_expand_ref(indptr, indices, ids, ecap)
 
 
 def counter_scatter(counters, status, upd_src, upd_delta,

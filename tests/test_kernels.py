@@ -10,6 +10,8 @@ from repro.kernels.bucket_peel import bucket_peel_pallas
 from repro.kernels.counter_scatter import counter_scatter_pallas
 from repro.kernels.first_live_scan import first_live_scan
 from repro.kernels.flash_attention import flash_attention
+from repro.kernels.frontier_compact import (frontier_compact_pallas,
+                                            sparse_expand_pallas)
 from repro.kernels.frontier_expand import frontier_expand
 from repro.kernels.segment_reduce import segment_sum_pallas
 
@@ -175,3 +177,90 @@ def test_frontier_expand(n, W, bv):
     none = frontier_expand(flags, valid, jnp.zeros(n, bool), block_v=bv,
                            interpret=True)
     assert not bool(none.any())
+
+
+# -- frontier compaction (the sparse-frontier substrate, DESIGN.md §12) ------
+
+def _compact_oracle(mask, capacity):
+    n = len(mask)
+    members = np.flatnonzero(mask).astype(np.int32)
+    ids = np.full(capacity, n, np.int32)
+    kept = members[:capacity]
+    ids[: len(kept)] = kept
+    return ids, np.int32(len(members))
+
+
+@pytest.mark.parametrize("n,cap,block", [(0, 8, 512), (1, 1, 512),
+                                         (333, 64, 64), (1024, 1024, 512),
+                                         (700, 16, 128)])
+@pytest.mark.parametrize("fill", ["none", "some", "all"])
+def test_frontier_compact(n, cap, block, fill):
+    """Pallas scan vs jnp ref vs numpy oracle — including the all-dead
+    (empty) and full-frontier masks, and capacity overflow (n=700,cap=16
+    with fill="all": overflow members drop, callers gate on count)."""
+    mask = {"none": np.zeros(n, bool), "all": np.ones(n, bool),
+            "some": RNG.random(n) < 0.3}[fill]
+    mask = jnp.asarray(mask)
+    want_ids, want_cnt = _compact_oracle(np.asarray(mask), cap)
+    for got_ids, got_cnt in (
+            frontier_compact_pallas(mask, cap, block=block, interpret=True),
+            ref.frontier_compact_ref(mask, cap)):
+        assert np.array_equal(np.asarray(got_ids), want_ids), (n, cap, fill)
+        assert int(got_cnt) == int(want_cnt)
+
+
+@pytest.mark.parametrize("n,m,cap,ecap", [(0, 0, 8, 16), (5, 0, 8, 16),
+                                          (64, 256, 16, 512),
+                                          (333, 1000, 64, 2048)])
+def test_sparse_expand(n, m, cap, ecap):
+    """Expansion of compacted CSR rows vs a numpy oracle, zero-degree rows
+    and the degenerate n=0/m=0 shapes included."""
+    src = RNG.integers(0, max(n, 1), m)
+    dst = RNG.integers(0, max(n, 1), m)
+    order = np.argsort(src, kind="stable")
+    indptr = jnp.asarray(np.searchsorted(src[order], np.arange(n + 1)),
+                         jnp.int32)
+    indices = jnp.asarray(dst[order], jnp.int32)
+    mask = RNG.random(n) < 0.2 if n else np.zeros(0, bool)
+    ids = jnp.asarray(_compact_oracle(mask, cap)[0])
+
+    ip = np.asarray(indptr)
+    w_src, w_tgt, w_pos = [], [], []
+    for v in np.flatnonzero(mask)[:cap]:
+        for p in range(ip[v], ip[v + 1]):
+            w_src.append(v), w_tgt.append(dst[order][p]), w_pos.append(p)
+    total = len(w_src)
+
+    for fn in (lambda: sparse_expand_pallas(indptr, indices, ids, ecap,
+                                            interpret=True),
+               lambda: ref.sparse_expand_ref(indptr, indices, ids, ecap)):
+        s, t, p, valid = map(np.asarray, fn())
+        assert valid.sum() == min(total, ecap)
+        assert np.array_equal(s[:total][valid[:total]],
+                              np.asarray(w_src)[valid[:total]])
+        assert np.array_equal(t[:total][valid[:total]],
+                              np.asarray(w_tgt)[valid[:total]])
+        assert np.array_equal(p[:total][valid[:total]],
+                              np.asarray(w_pos)[valid[:total]])
+
+
+def test_frontier_compact_no_retrace():
+    """One trace serves every mask shape-alike: all-dead, full, partial
+    (the direction switch flips per round — retracing would kill the
+    compile-once contract)."""
+    traces = 0
+
+    def counted(mask):
+        nonlocal traces
+        traces += 1
+        ids, cnt = ref.frontier_compact_ref(mask, 16)
+        s, t, p, v = ref.sparse_expand_ref(
+            jnp.arange(65, dtype=jnp.int32), jnp.zeros(64, jnp.int32),
+            ids, 64)
+        return cnt + v.sum()
+
+    jitted = jax.jit(counted)
+    for mask in (np.zeros(64, bool), np.ones(64, bool),
+                 RNG.random(64) < 0.5):
+        jitted(jnp.asarray(mask)).block_until_ready()
+    assert traces == 1

@@ -327,6 +327,59 @@ def test_compare_docs_workload_mismatch_checks_scale_free_only():
     assert compare_docs(_doc(), small)[0] == Verdict.FAIL
 
 
+def test_compare_docs_missing_family_fails():
+    """A baseline family dropped from the fresh run is a hard FAIL at any
+    workload — never a silent scale-free pass."""
+    gone = _doc()
+    del gone["families"]["ER"]
+    gone["smoke"] = False                      # workload differs too
+    verdict, msgs = compare_docs(_doc(), gone)
+    assert verdict == Verdict.FAIL
+    assert "missing" in msgs[0] and "ER" in msgs[0]
+    # extra fresh families are fine: the workload merely differs
+    extra = _doc()
+    extra["families"]["BA"] = dict(extra["families"]["ER"])
+    assert compare_docs(_doc(), extra)[0] == Verdict.OK
+
+
+def test_compare_docs_summary_names_regressed_families():
+    slow = _doc()
+    slow["families"]["ER"]["x_ms"] = 25.0
+    verdict, msgs = compare_docs(_doc(), slow)
+    assert verdict == Verdict.FAIL
+    assert msgs[-1] == "regressed families: ER"
+
+
+def test_compare_docs_rate_keys_gate_drops_only():
+    """speedup_*/_per_sec are wall-clock-derived, higher-is-better: a
+    big jump is the win being measured, a big drop is the regression."""
+    base = _doc()
+    base["families"]["ER"].update(speedup_host=2.0, upd_per_sec=1000.0)
+    better = _doc()
+    better["families"]["ER"].update(speedup_host=9.0, upd_per_sec=9000.0)
+    assert compare_docs(base, better)[0] == Verdict.OK
+    worse = _doc()
+    worse["families"]["ER"].update(speedup_host=0.5, upd_per_sec=100.0)
+    verdict, msgs = compare_docs(base, worse)
+    assert verdict == Verdict.FAIL
+    assert any("speedup_host" in m for m in msgs)
+    assert any("upd_per_sec" in m for m in msgs)
+
+
+def test_compare_docs_string_keys_exact():
+    """String keys (frontier_path_taken) are deterministic: drift fails."""
+    base = _doc()
+    base["families"]["ER"]["frontier_path_taken"] = "sparse"
+    flipped = _doc()
+    flipped["families"]["ER"]["frontier_path_taken"] = "dense"
+    verdict, msgs = compare_docs(base, flipped)
+    assert verdict == Verdict.FAIL
+    assert any("frontier_path_taken" in m for m in msgs)
+    same = _doc()
+    same["families"]["ER"]["frontier_path_taken"] = "sparse"
+    assert compare_docs(base, same)[0] == Verdict.OK
+
+
 def test_compare_docs_rejects_malformed():
     v1 = _doc()
     del v1["schema"]
