@@ -1,5 +1,11 @@
 """Paper-table benchmarks for the trimming algorithms.
 
+Two output modes:
+
+* ``--tables`` (the historical mode ``benchmarks/run.py`` drives
+  function-by-function) emits the paper-table CSV lines over the
+  full-size ``common.GRAPHS``:
+
   table6  — graph characteristics (n, m, Deg_in/out, α, %trim)
   table7  — waiting-set bound |Qp| (16 workers) for AC4/AC6
   table8  — max traversed edges per worker, workers ∈ {1..32}, + the
@@ -9,6 +15,13 @@
   stability — repeatability of edges/time over repeats (paper Fig. 6)
   scaling — edge-sampling sweep 10..100% (paper Figs. 7-9)
 
+* default — one ``BENCH_trim.json`` document (``common.make_doc``
+  envelope) over moderate per-family sizes: per method, steady-state
+  trim latency plus the *deterministic* telemetry the regression gate
+  compares exactly (rounds, total traversed edges, busiest-worker
+  edges, imbalance — all machine-independent integers or ratios of
+  integers).  ``--smoke`` shrinks the sizes for CI.
+
 All measurements go through compile-once engines (``core.engine.plan``):
 the transpose is built once per graph and every timed call is a cached
 executable — table9/stability measure steady-state serving latency, not
@@ -16,11 +29,24 @@ retrace + host transpose churn.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import sys
+
+sys.path.insert(0, "src")
+
 import numpy as np
 
 from repro.core import CSRGraph, peeling_alpha
 from repro.core.engine import plan
-from .common import GRAPHS, METHODS, emit, get_graph, timeit
+from repro.graphs import generators
+
+try:
+    from .common import GRAPHS, METHODS, emit, get_graph, timeit
+    from . import common
+except ImportError:
+    import common
+    from common import GRAPHS, METHODS, emit, get_graph, timeit
 
 WORKER_SWEEP = (1, 2, 4, 8, 16, 32)
 
@@ -129,13 +155,94 @@ def scaling():
                  f"max_edges_pw={int(res.per_worker_edges.max())}")
 
 
-def main():
+# -- JSON mode (BENCH_trim.json, gated by check_regression.py) ----------------
+
+JSON_WORKERS = 16
+
+# Moderate sizes (the full-size GRAPHS above are launch-scale and take
+# minutes per method); same families and parameterization idiom as
+# bench_obs so the telemetry regime — large trimmable fraction,
+# non-trivial propagation depth — matches the paper's comparison.
+JSON_SIZES = {
+    "ER": dict(n=30_000, m=36_000, seed=1),
+    "BA": dict(n=20_000, deg=3, seed=1),
+    "RMAT": dict(n_log2=14, m=20_480, seed=1, a=0.4, b=0.1, c=0.1),
+    "chain": dict(n=5_000),
+    "layered": dict(n=30_000, layers=37, deg=4, seed=1),
+    "sink_heavy": dict(n=30_000, m=120_000, sink_frac=0.9, seed=1),
+}
+JSON_SMOKE_SIZES = {
+    "ER": dict(n=2_000, m=2_400, seed=1),
+    "BA": dict(n=2_000, deg=3, seed=1),
+    "RMAT": dict(n_log2=10, m=1_280, seed=1, a=0.4, b=0.1, c=0.1),
+    "chain": dict(n=500),
+    "layered": dict(n=2_000, layers=21, deg=4, seed=1),
+    "sink_heavy": dict(n=2_000, m=8_000, sink_frac=0.9, seed=1),
+}
+
+
+def bench_json_method(g, gt, method: str) -> dict:
+    engine = plan(g, method=method, workers=JSON_WORKERS, chunk=1,
+                  transpose=gt)
+    res = engine.run(counters=True)
+    pw = np.asarray(res.per_worker_edges).astype(np.int64)
+    med, _ = timeit(lambda: engine.run(counters=True).materialize())
+    return {
+        # deterministic telemetry — gated exactly on matching workloads
+        "rounds": int(res.rounds),
+        "edges_total": int(pw.sum()),
+        "max_per_worker": int(pw.max()),
+        "imbalance": round(float(pw.max() / max(pw.mean(), 1e-9)), 3),
+        "trimmed": int(res.n_trimmed),
+        "max_qp": int(res.max_frontier),
+        # wall clock — tolerance-banded, slower-only
+        "steady_ms": round(med * 1e3, 3),
+    }
+
+
+def bench_json_family(name: str, kwargs: dict) -> dict:
+    factory, _ = generators.BENCHMARK_GRAPHS[name]
+    g = factory(**kwargs)
+    gt = g.transpose()
+    print(f"# {name}: n={g.n:,} m={g.m:,}", file=sys.stderr)
+    row = {"n": g.n, "m": g.m, "methods": {}}
+    for method in METHODS:
+        row["methods"][method] = bench_json_method(g, gt, method)
+    return row
+
+
+def run_tables():
     table6()
     table7()
     table8()
     table9()
     stability()
     scaling()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tables", action="store_true",
+                    help="emit the paper-table CSV lines over the "
+                         "full-size graphs instead of BENCH_trim.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny graphs (CI); counts stay deterministic")
+    ap.add_argument("--out", default="BENCH_trim.json")
+    ap.add_argument("--families", nargs="*", default=None)
+    args = ap.parse_args()
+    if args.tables:
+        run_tables()
+        return
+    sizes = JSON_SMOKE_SIZES if args.smoke else JSON_SIZES
+    families = args.families or list(sizes)
+    doc = common.make_doc("trim", smoke=args.smoke, workers=JSON_WORKERS,
+                          families={})
+    for name in families:
+        doc["families"][name] = bench_json_family(name, sizes[name])
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    print(json.dumps(doc, indent=2))
 
 
 if __name__ == "__main__":

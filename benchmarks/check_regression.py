@@ -41,11 +41,12 @@ What is compared depends on how well the workloads match:
 When the verdict is FAIL because of per-family regressions, the last
 message is a one-line summary naming exactly which families regressed.
 
-``--quick`` runs ``bench_obs --smoke`` and ``bench_scc --smoke`` fresh
-(the latter exercises the sparse-frontier path: the smoke-size chain
-family compacts on every round under the default ``frontier="auto"``
-plan), gates them against the committed ``BENCH_obs.json`` /
-``BENCH_scc.json``, and schema-validates every other committed
+``--quick`` runs ``bench_obs --smoke``, ``bench_scc --smoke`` (which
+exercises the sparse-frontier path: the smoke-size chain family
+compacts on every round under the default ``frontier="auto"`` plan),
+and ``bench_trim --smoke`` (per-method deterministic telemetry: rounds,
+edges traversed, busiest-worker edges, imbalance), gates them against
+the committed baselines, and schema-validates every other committed
 ``BENCH_*.json`` — cheap enough for CI on every push.
 """
 from __future__ import annotations
@@ -70,8 +71,11 @@ TIMING_SUFFIXES = ("_ms",)
 RATE_SUFFIXES = ("_per_sec",)
 RATE_PREFIXES = ("speedup_",)
 
-#: keys that are volatile by nature and never compared
-SKIP_KEYS = {"imbalance"}  # ratio of ints, already covered by the ints
+#: keys that are volatile by nature and never compared.  Deterministic
+#: telemetry keys (rounds, edges_total, max_per_worker, imbalance) are
+#: all gated — imbalance is a ratio of deterministic ints, so the float
+#: isclose comparison is exact in practice.
+SKIP_KEYS: set[str] = set()
 
 
 class Verdict:
@@ -101,8 +105,8 @@ def validate_doc(doc: dict, label: str) -> list[str]:
     if not isinstance(schema, int):
         problems.append(f"{label}: missing integer 'schema' "
                         f"(pre-envelope v1 document? regenerate it)")
-    elif schema != 2:
-        problems.append(f"{label}: schema {schema} != 2 "
+    elif schema != 3:
+        problems.append(f"{label}: schema {schema} != 3 "
                         f"(regenerate with current benchmarks/)")
     if not isinstance(doc.get("bench"), str):
         problems.append(f"{label}: missing 'bench' name")
@@ -256,7 +260,8 @@ def _report(label: str, verdict: str, messages: list[str]) -> None:
 #: bench_scc rides along because its smoke run drives the sparse-frontier
 #: path end to end (chain compacts every round under ``frontier="auto"``).
 QUICK_BENCHES = (("bench_obs.py", "BENCH_obs.json"),
-                 ("bench_scc.py", "BENCH_scc.json"))
+                 ("bench_scc.py", "BENCH_scc.json"),
+                 ("bench_trim.py", "BENCH_trim.json"))
 
 
 def run_quick_one(script: str, baseline: str,

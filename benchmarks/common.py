@@ -29,8 +29,11 @@ from repro.core import CSRGraph, trim
 from repro.graphs import generators
 
 #: bump when the BENCH_*.json layout changes incompatibly.  Version 2
-#: introduced the schema/env envelope itself (v1 documents have neither).
-SCHEMA_VERSION = 2
+#: introduced the schema/env envelope itself (v1 documents have neither);
+#: version 3 made the deterministic telemetry keys (rounds, edges_total,
+#: max_per_worker, imbalance) part of the gated contract and added
+#: BENCH_trim.json.
+SCHEMA_VERSION = 3
 
 _CACHE: dict[str, CSRGraph] = {}
 

@@ -1,6 +1,16 @@
-"""Render the §Dry-run / §Roofline tables from results/dryrun.jsonl.
+"""Render the §Dry-run / §Roofline tables from results/dryrun.jsonl, or a
+measured-cost roofline from a MetricsPlane snapshot.
 
     PYTHONPATH=src python -m benchmarks.roofline [--jsonl results/dryrun.jsonl]
+    PYTHONPATH=src python -m benchmarks.roofline --metrics-json snap.json
+
+``--metrics-json`` consumes the ``repro_plan_cost_*`` gauge families the
+engines stamp from XLA's own cost model (``compiled.cost_analysis()``,
+DESIGN.md §13) — per compiled plan: estimated FLOPs, bytes accessed,
+arithmetic intensity, and the *measured* execute-phase dispatch latency
+from the same snapshot.  Unlike the dry-run tables, nothing here is
+hand-estimated: both sides of the model-vs-measured comparison come from
+the run itself.
 """
 from __future__ import annotations
 
@@ -46,11 +56,64 @@ def render(recs, mesh_filter="single_pod_16x16"):
     return header + "\n" + "\n".join(rows)
 
 
+def _gauge_children(fams, name):
+    return fams.get(name, {}).get("children", [])
+
+
+def render_metrics(doc):
+    """Measured roofline rows from a ``MetricsPlane.snapshot()`` doc."""
+    if doc.get("metrics_schema") != 1:
+        raise SystemExit("not a MetricsPlane snapshot "
+                         "(expected metrics_schema == 1; produce one with "
+                         "launch/trim.py --metrics-json or "
+                         "launch/serve.py --metrics-json)")
+    fams = doc.get("families", {})
+    flops = {}
+    for c in _gauge_children(fams, "repro_plan_cost_flops"):
+        lab = c["labels"]
+        flops[(lab.get("family", "?"), lab.get("plan", "?"))] = c["value"]
+    nbytes = {}
+    for c in _gauge_children(fams, "repro_plan_cost_bytes"):
+        lab = c["labels"]
+        nbytes[(lab.get("family", "?"), lab.get("plan", "?"))] = c["value"]
+    # measured execute-phase latency per engine family (exact p50 from
+    # the histogram's sample ring)
+    lat = {}
+    for c in _gauge_children(fams, "repro_dispatch_latency_seconds"):
+        if c["labels"].get("phase") == "execute":
+            lat[c["labels"].get("family", "?")] = c.get("p50")
+    header = ("| family | plan | MFLOPs | MiB accessed | flop/byte | "
+              "exec p50 (ms) | model GB/s |\n|---|---|---|---|---|---|---|")
+    rows = []
+    for key in sorted(set(flops) | set(nbytes)):
+        fam, plan = key
+        f = flops.get(key, 0.0)
+        b = nbytes.get(key, 0.0)
+        p50 = lat.get(fam)
+        bw = (b / p50 / 1e9) if (p50 and b) else None
+        rows.append(
+            f"| {fam} | `{plan}` | {f/1e6:.2f} | {b/2**20:.2f} | "
+            f"{f/b if b else 0:.3f} | "
+            f"{'—' if p50 is None else f'{p50*1e3:.2f}'} | "
+            f"{'—' if bw is None else f'{bw:.2f}'} |")
+    if not rows:
+        return header + "\n<!-- no repro_plan_cost_* families in this " \
+                        "snapshot: run with the MetricsPlane enabled -->"
+    return header + "\n" + "\n".join(rows)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--jsonl", default="results/dryrun.jsonl")
     ap.add_argument("--mesh", default="single_pod_16x16")
+    ap.add_argument("--metrics-json", metavar="PATH",
+                    help="render the measured plan-cost roofline from a "
+                         "MetricsPlane JSON snapshot instead")
     args = ap.parse_args()
+    if args.metrics_json:
+        with open(args.metrics_json) as f:
+            print(render_metrics(json.load(f)))
+        return
     recs = load(args.jsonl)
     print(render(recs, args.mesh))
     ok = sum(1 for r in recs.values() if r["status"] == "ok")

@@ -229,6 +229,18 @@ class TrimEngine(EngineBase):
                 "this engine was planned with unmasked=True (no active "
                 "masks); plan() a maskable configuration instead")
 
+    def nbytes_breakdown(self):
+        # _tarrs[0:2] alias the cached transpose (already accounted by the
+        # base); only the extras are new bytes
+        out = super().nbytes_breakdown()
+        if self._tarrs is not None:
+            out["row_ids"] = obs.array_nbytes(self._tarrs[2])
+        if self._worker_ids is not None:
+            out["worker_ids"] = obs.array_nbytes(self._worker_ids)
+        if self._shard is not None:
+            out["shard_operands"] = obs.array_nbytes(self._shard["operands"])
+        return out
+
     # -- execution ---------------------------------------------------------
     def run(self, active=None, counters: bool = True) -> TrimResult:
         """Trim (the ``active``-induced subgraph of) the planned graph.
@@ -264,6 +276,7 @@ class TrimEngine(EngineBase):
         if self.instrument:
             rs = obs.RoundStats(rounds, stats, per_worker=pw,
                                 max_rounds=self.max_rounds)
+            self._publish_round_stats(rs)
         return TrimResult(status=status.astype(jnp.int32), rounds=rounds,
                           max_frontier=max_qp, per_worker_edges=pw,
                           round_stats=rs)
@@ -313,6 +326,9 @@ class TrimEngine(EngineBase):
         status, rounds, pw, max_qp, stats = self._dispatch(
             fn, self.graph.indptr, self.graph.indices,
             self._transpose_arrays(), self._ids(), masks)
+        if stats is not None:
+            self._publish_round_stats(obs.RoundStats(
+                rounds, stats, per_worker=pw, max_rounds=self.max_rounds))
         return status.astype(jnp.int32), pw, rounds, max_qp, stats
 
     def run_batch(self, active_masks, counters: bool = True):
@@ -477,6 +493,7 @@ class TrimEngine(EngineBase):
                 {"r_frontier": out[4], "r_edges": out[5]},
                 per_worker=edges.reshape(-1),
                 max_rounds=self.max_rounds)
+            self._publish_round_stats(rs)
         return TrimResult(
             status=status, rounds=jnp.max(rounds),
             max_frontier=jnp.max(max_qp) if counters else None,

@@ -28,8 +28,22 @@ attribution (``phase="compile+execute"`` when the dispatch caused one or
 more kernel traces).  The global recorder is disabled by default, in
 which case the span context is a no-op — un-observed runs pay a single
 attribute read per dispatch.
+
+When the process-global MetricsPlane is enabled (DESIGN.md §13) each
+dispatch additionally feeds the continuous layer: a per-family latency
+histogram split compile-vs-execute, dispatch/trace counters,
+retrace-storm detection, per-plan XLA cost analysis (on compile
+dispatches only — the lowering it needs would otherwise perturb trace
+accounting), and the engine's live-buffer byte gauges via the
+``nbytes()`` protocol.  The plane is disabled by default and guarded by
+one ``enabled`` attribute read, the same contract as the recorder.
 """
 from __future__ import annotations
+
+import time
+from typing import Dict
+
+import numpy as np
 
 from .. import obs
 from .graph import CSRGraph
@@ -89,11 +103,28 @@ class EngineBase:
         1 regardless of batch size; degenerate host shortcuts = 0)."""
         return self._dispatches
 
+    # -- memory accounting (nbytes protocol, DESIGN.md §13) ----------------
+    def nbytes_breakdown(self) -> Dict[str, int]:
+        """Live-buffer bytes by component (static shape × dtype, no device
+        sync).  Subclasses extend with their plan caches; the base accounts
+        the graph itself and the cached transpose."""
+        out = {"graph": obs.array_nbytes(self.graph)}
+        if self._transpose is not None:
+            out["transpose"] = obs.array_nbytes(self._transpose)
+        return out
+
+    def nbytes(self) -> int:
+        """Total live-buffer bytes held by this engine."""
+        return sum(self.nbytes_breakdown().values())
+
     def _dispatch(self, fn, *args):
         """Call a jitted runner, attributing trace deltas and counting the
         dispatch.  Each dispatch is one ``obs`` span (no-op context when
-        the global recorder is disabled)."""
+        the global recorder is disabled) and, when the MetricsPlane is
+        enabled, one latency-histogram sample plus counter updates."""
         before = _TRACE_COUNT[0]
+        plane = obs.get_plane()
+        t0 = time.perf_counter() if plane.enabled else 0.0
         with obs.span("dispatch", cat="engine", family=self.family,
                       plan=self.plan_signature(),
                       seq=self._dispatches) as sp:
@@ -103,9 +134,77 @@ class EngineBase:
                 sp.attrs["traces"] = delta
                 sp.attrs["phase"] = ("compile+execute" if delta
                                      else "execute")
+            if plane.enabled:
+                self._feed_plane(plane, fn, args, delta,
+                                 time.perf_counter() - t0, sp)
         self._traces += delta
         self._dispatches += 1
         return out
+
+    def _feed_plane(self, plane, fn, args, delta, elapsed, sp) -> None:
+        """Publish one dispatch to the MetricsPlane (enabled plane only).
+
+        Latency is host-side dispatch time — the same quantity the span
+        measures (jax dispatch is async; compile dispatches block on the
+        trace, execute dispatches on enqueue).
+        """
+        phase = "compile" if delta else "execute"
+        plane.histogram(
+            "repro_dispatch_latency_seconds",
+            "host-side engine dispatch latency by family, split "
+            "compile-vs-execute",
+        ).observe(elapsed, family=self.family, phase=phase)
+        plane.counter(
+            "repro_dispatches",
+            "device dispatches issued per engine family",
+        ).inc(family=self.family)
+        if delta:
+            plan = self.plan_signature()
+            plane.counter(
+                "repro_traces",
+                "kernel traces (compilations) caused per engine family",
+            ).inc(delta, family=self.family)
+            plane.note_compile(self.family, plan)
+            cost = obs.plan_cost_of(fn, *args)
+            if cost:
+                obs.record_plan_cost(plane, self.family, plan, cost)
+                if sp is not None:
+                    sp.attrs["cost"] = cost
+        obs.publish_engine_memory(plane, self)
+
+    def _publish_round_stats(self, rs) -> None:
+        """Fold one run's :class:`~repro.obs.stats.RoundStats` into the
+        MetricsPlane (rounds, per-stat work totals, worker skew).  No-op
+        when the plane is disabled or the plan was not instrumented; an
+        enabled plane forces the stats buffers to host."""
+        plane = obs.get_plane()
+        if rs is None or not plane.enabled:
+            return
+        plane.counter(
+            "repro_fixpoint_rounds",
+            "fixpoint rounds executed per engine family (summed over "
+            "batches)",
+        ).inc(int(np.sum(rs.rounds)), family=self.family)
+        work = plane.counter(
+            "repro_fixpoint_work",
+            "per-round instrumented work totals by stat (edges = edges "
+            "traversed, frontier = frontier sizes, decrements = counter "
+            "decrements, r_sparse = rounds on the sparse path)")
+        for name in rs.names:
+            work.inc(float(np.sum(rs.total(name))),
+                     family=self.family, stat=name)
+        mwe = rs.max_worker_edges()
+        if mwe is not None:
+            plane.gauge(
+                "repro_busiest_worker_edges",
+                "edges traversed by the busiest worker in the last "
+                "instrumented run (paper's per-worker load metric)",
+            ).set(float(np.max(mwe)), family=self.family)
+            plane.gauge(
+                "repro_worker_imbalance",
+                "max/mean per-worker traversed edges in the last "
+                "instrumented run (1.0 = perfectly balanced)",
+            ).set(float(np.max(rs.imbalance())), family=self.family)
 
 
 __all__ = ["EngineBase", "_TRACE_COUNT"]

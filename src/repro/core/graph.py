@@ -334,6 +334,27 @@ class DeltaCSR:
     def needs_compact(self) -> bool:
         return self.overlay_fraction > self.load_factor
 
+    # -- memory accounting (nbytes protocol, DESIGN.md §13) ----------------
+    def nbytes_breakdown(self) -> dict:
+        """Overlay bytes by component (device overlay, insert buffers, and
+        the host mirrors that drive resolution), excluding the base graph
+        — the owning engine accounts that as its ``graph`` component."""
+        from ..obs.memory import array_nbytes
+        return {
+            "tombstones": array_nbytes(self.tomb) + self._tomb_np.nbytes,
+            "insert_buffers": (
+                array_nbytes((self.ins_src, self.ins_dst, self.ins_alive))
+                + self._ins_src_np.nbytes + self._ins_dst_np.nbytes
+                + self._ins_alive_np.nbytes),
+            "host_index": (self._src_np.nbytes + self._dst_np.nbytes
+                           + self._key_order.nbytes
+                           + self._keys_sorted.nbytes),
+        }
+
+    def nbytes(self) -> int:
+        """Total overlay bytes (base graph excluded)."""
+        return sum(self.nbytes_breakdown().values())
+
     # -- host-side bookkeeping (the engine drives these) -------------------
     def resolve_deletions(self, src, dst):
         """Resolve a deletion batch to concrete edge instances and mark the

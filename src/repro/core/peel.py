@@ -458,7 +458,16 @@ class PeelEngine(EngineBase):
     def _wrap_stats(self, rounds, stats):
         if not self.instrument:
             return None
-        return obs.RoundStats(rounds, stats, max_rounds=self.max_rounds)
+        rs = obs.RoundStats(rounds, stats, max_rounds=self.max_rounds)
+        self._publish_round_stats(rs)
+        return rs
+
+    def nbytes_breakdown(self):
+        # _tarrs[0:2] alias the cached transpose (accounted by the base)
+        out = super().nbytes_breakdown()
+        if self._tarrs is not None:
+            out["row_ids"] = obs.array_nbytes(self._tarrs[2])
+        return out
 
     # -- degenerate paths (no kernel dispatch, still device-resident) ------
     def _degenerate(self, act, k, *, batched):

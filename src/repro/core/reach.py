@@ -568,7 +568,17 @@ class ReachEngine(EngineBase):
     def _wrap_stats(self, rounds, stats):
         if not self.instrument:
             return None
-        return obs.RoundStats(rounds, stats, max_rounds=self.max_rounds)
+        rs = obs.RoundStats(rounds, stats, max_rounds=self.max_rounds)
+        self._publish_round_stats(rs)
+        return rs
+
+    def nbytes_breakdown(self):
+        # _garrs[0:2]/_tarrs alias graph/transpose arrays (accounted by
+        # the base); the push backend's edge_src row ids are new bytes
+        out = super().nbytes_breakdown()
+        if self._garrs is not None and self._garrs[2] is not None:
+            out["edge_src"] = obs.array_nbytes(self._garrs[2])
+        return out
 
     def _empty_stats(self, rounds, lanes: int = 0):
         if not self.instrument:

@@ -489,7 +489,22 @@ class StreamEngine(EngineBase):
                                                _STAT_NAMES),
                              max_rounds=self.max_rounds))
         self._last_stats = rs
+        if stats is not None:
+            self._publish_round_stats(rs)
         return rs
+
+    def nbytes_breakdown(self):
+        # _tarrs[0:2] seed the base transpose cache (already accounted);
+        # the transpose row ids + base-edge permutation and the DeltaCSR
+        # overlay (tombstones, insert buffers, host index) are new bytes
+        out = super().nbytes_breakdown()
+        for k, v in self.delta.nbytes_breakdown().items():
+            out[f"delta_{k}"] = v
+        if self._tarrs is not None:
+            out["transpose_perm"] = obs.array_nbytes(self._tarrs[2:])
+        if self._state is not None:
+            out["state"] = obs.array_nbytes(self._state)
+        return out
 
     # -- execution ---------------------------------------------------------
     def apply(self, deletions=None, insertions=None) -> StreamResult:

@@ -91,7 +91,10 @@ _STREAM_GRAPHS = {
 
 def serve_trim_stream(graph: str = "ER", ticks: int = 20, batch: int = 256,
                       seed: int = 0, instrument: bool = False,
-                      trace: str | None = None):
+                      trace: str | None = None,
+                      metrics_port: int | None = None,
+                      slo_ms: float = 50.0, metrics_hold: float = 0.0,
+                      metrics_json: str | None = None):
     """Drive a :class:`~repro.core.stream.StreamEngine` with a synthetic
     update feed: each tick deletes a batch of random live edges and
     re-inserts a previously deleted batch (re-insertions may hit the
@@ -104,69 +107,123 @@ def serve_trim_stream(graph: str = "ER", ticks: int = 20, batch: int = 256,
     dispatch compiled are excluded from the throughput window (naive
     wall-clock-over-everything math charges compile time to the first
     window and understates sustained throughput).  ``--trace`` exports
-    the full tick/dispatch timeline for chrome://tracing."""
+    the full tick/dispatch timeline for chrome://tracing.
+
+    ``--metrics-port`` (off by default) additionally installs a
+    MetricsPlane for the duration of the serve and exposes it on a
+    stdlib http server: ``/metrics`` (OpenMetrics text) and ``/healthz``
+    (JSON).  It implies ``--instrument`` and tracks a per-tick SLO —
+    sliding-window p99 against ``--slo-ms``, with a breach counter.
+    Port 0 picks a free port; ``--metrics-hold`` keeps the endpoint up
+    for N seconds after the feed finishes so a scraper can collect the
+    final state, and ``--metrics-json`` dumps the snapshot to a file."""
     from .. import obs
     from ..core.stream import plan_stream
     from ..graphs import generators
 
-    fn_name, kwargs = _STREAM_GRAPHS[graph]
-    g = getattr(generators, fn_name)(**kwargs)
-    # headroom for many insert batches between compactions: every compact
-    # changes the base CSR shape and costs one retrace of the apply step
-    engine = plan_stream(g, capacity=max(4096, 16 * batch),
-                         instrument=instrument)
-    rng = np.random.default_rng(seed)
-    src, dst = engine.delta._src_np.copy(), engine.delta._dst_np.copy()
-    alive = np.ones(g.m, bool)
-    pending = []                     # deleted batches awaiting re-insertion
-    dirty_ticks = 0
-    with obs.recording() as rec:
-        for tick in range(ticks):
-            k = min(batch, int(alive.sum()))
-            ids = rng.choice(np.nonzero(alive)[0], k, replace=False)
-            alive[ids] = False
-            ins = pending.pop(0) if len(pending) >= 3 else None
-            n_upd = k + (0 if ins is None else len(ins))
-            with obs.span("tick", cat="serve", tick=tick, updates=n_upd):
-                res = engine.apply(
-                    deletions=(src[ids], dst[ids]),
-                    insertions=None if ins is None else
-                    (src[ins], dst[ins]))
-                _ = int(res.rounds)  # host sync closes the span honestly
-            if ins is not None:
-                alive[ins] = True
-            pending.append(ids)
-            dirty_ticks += bool(res.dirty)
-        res = engine.retrim()
+    plane = server = slo = None
+    prev_plane = None
+    health = {"status": "warming", "graph": graph, "ticks_done": 0}
+    if metrics_port is not None:
+        plane = obs.MetricsPlane()
+        prev_plane = obs.set_plane(plane)
+        instrument = True            # metrics imply round telemetry
+        slo = obs.SLOTracker(slo_ms / 1e3, name="tick", plane=plane)
+        server = obs.MetricsServer(metrics_port,
+                                   plane_getter=lambda: plane,
+                                   health_getter=lambda: dict(health))
+        print(f"[serve] metrics endpoint: "
+              f"http://127.0.0.1:{server.port}/metrics "
+              f"(SLO target {slo_ms:.1f} ms/tick)")
+    try:
+        fn_name, kwargs = _STREAM_GRAPHS[graph]
+        g = getattr(generators, fn_name)(**kwargs)
+        # headroom for many insert batches between compactions: every
+        # compact changes the base CSR shape and costs one retrace of the
+        # apply step
+        engine = plan_stream(g, capacity=max(4096, 16 * batch),
+                             instrument=instrument)
+        rng = np.random.default_rng(seed)
+        src, dst = engine.delta._src_np.copy(), engine.delta._dst_np.copy()
+        alive = np.ones(g.m, bool)
+        pending = []                 # deleted batches awaiting re-insertion
+        dirty_ticks = 0
+        with obs.recording() as rec:
+            for tick in range(ticks):
+                k = min(batch, int(alive.sum()))
+                ids = rng.choice(np.nonzero(alive)[0], k, replace=False)
+                alive[ids] = False
+                ins = pending.pop(0) if len(pending) >= 3 else None
+                n_upd = k + (0 if ins is None else len(ins))
+                t0 = time.perf_counter()
+                with obs.span("tick", cat="serve", tick=tick,
+                              updates=n_upd):
+                    res = engine.apply(
+                        deletions=(src[ids], dst[ids]),
+                        insertions=None if ins is None else
+                        (src[ins], dst[ins]))
+                    _ = int(res.rounds)  # host sync closes span honestly
+                if slo is not None:
+                    slo.observe(time.perf_counter() - t0)
+                if plane is not None:
+                    plane.counter(
+                        "repro_serve_updates",
+                        "edge updates applied by the serving loop",
+                    ).inc(n_upd, graph=graph)
+                if ins is not None:
+                    alive[ins] = True
+                pending.append(ids)
+                dirty_ticks += bool(res.dirty)
+                health["ticks_done"] = tick + 1
+                health["status"] = "ok"
+            res = engine.retrim()
 
-    tick_spans = rec.select("tick", cat="serve")
-    dispatches = rec.select("dispatch", cat="engine")
+        tick_spans = rec.select("tick", cat="serve")
+        dispatches = rec.select("dispatch", cat="engine")
 
-    def compiled_during(t):
-        return any(d.attrs.get("phase") == "compile+execute"
-                   and t.ts <= d.ts < t.ts + t.dur for d in dispatches)
+        def compiled_during(t):
+            return any(d.attrs.get("phase") == "compile+execute"
+                       and t.ts <= d.ts < t.ts + t.dur for d in dispatches)
 
-    steady = [t for t in tick_spans if not compiled_during(t)]
-    warm = len(tick_spans) - len(steady)
-    n_updates = sum(t.attrs["updates"] for t in tick_spans)
-    steady_s = sum(t.dur for t in steady)
-    ups = (sum(t.attrs["updates"] for t in steady) / steady_s
-           if steady_s else float("nan"))
-    print(f"[serve] trim-stream {graph} n={g.n} m={g.m}: {ticks} ticks "
-          f"({warm} compile, excluded), {n_updates} updates, "
-          f"{ups:,.0f} updates/s steady-state, dirty ticks {dirty_ticks}, "
-          f"trimmed {res.n_trimmed} ({res.trimmed_fraction*100:.1f}%), "
-          f"compactions {engine.compactions}")
-    if instrument and res.round_stats is not None:
-        rs = res.round_stats
-        print(f"[serve]   last-batch telemetry: "
-              f"frontier {int(rs.total('r_frontier'))}, "
-              f"edges {int(rs.total('r_edges'))}, "
-              f"decrements {int(rs.total('r_decrements'))}")
-    if trace:
-        path = rec.to_chrome_trace(trace)
-        print(f"[serve]   chrome trace: {path} ({len(rec.spans)} spans)")
-    return engine
+        steady = [t for t in tick_spans if not compiled_during(t)]
+        warm = len(tick_spans) - len(steady)
+        n_updates = sum(t.attrs["updates"] for t in tick_spans)
+        steady_s = sum(t.dur for t in steady)
+        ups = (sum(t.attrs["updates"] for t in steady) / steady_s
+               if steady_s else float("nan"))
+        print(f"[serve] trim-stream {graph} n={g.n} m={g.m}: {ticks} ticks "
+              f"({warm} compile, excluded), {n_updates} updates, "
+              f"{ups:,.0f} updates/s steady-state, dirty ticks "
+              f"{dirty_ticks}, trimmed {res.n_trimmed} "
+              f"({res.trimmed_fraction*100:.1f}%), "
+              f"compactions {engine.compactions}")
+        if instrument and res.round_stats is not None:
+            rs = res.round_stats
+            print(f"[serve]   last-batch telemetry: "
+                  f"frontier {int(rs.total('r_frontier'))}, "
+                  f"edges {int(rs.total('r_edges'))}, "
+                  f"decrements {int(rs.total('r_decrements'))}")
+        if slo is not None:
+            print(f"[serve]   SLO: tick p99 {slo.p99*1e3:.2f} ms vs "
+                  f"target {slo_ms:.1f} ms, breaches {slo.breaches}")
+        if trace:
+            path = rec.to_chrome_trace(trace)
+            print(f"[serve]   chrome trace: {path} "
+                  f"({len(rec.spans)} spans)")
+        if metrics_json and plane is not None:
+            import json
+            with open(metrics_json, "w") as f:
+                json.dump(plane.snapshot(), f, indent=1)
+            print(f"[serve]   metrics snapshot: {metrics_json}")
+        if server is not None and metrics_hold > 0:
+            print(f"[serve]   holding /metrics for {metrics_hold:.0f}s")
+            time.sleep(metrics_hold)
+        return engine
+    finally:
+        if server is not None:
+            server.close()
+        if prev_plane is not None:
+            obs.set_plane(prev_plane)
 
 
 def main():
@@ -184,11 +241,29 @@ def main():
                     help="device-resident round telemetry (trim-stream)")
     ap.add_argument("--trace", metavar="PATH",
                     help="write a chrome://tracing timeline (trim-stream)")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    metavar="PORT",
+                    help="serve /metrics + /healthz on this port (0 = any "
+                         "free port; off by default, implies --instrument)")
+    ap.add_argument("--slo-ms", type=float, default=50.0,
+                    help="per-tick SLO target for the p99 tracker "
+                         "(with --metrics-port)")
+    ap.add_argument("--metrics-hold", type=float, default=0.0,
+                    metavar="SECONDS",
+                    help="keep the metrics endpoint up this long after "
+                         "the feed finishes")
+    ap.add_argument("--metrics-json", metavar="PATH",
+                    help="dump the final MetricsPlane snapshot as JSON "
+                         "(with --metrics-port)")
     args = ap.parse_args()
     if args.app == "trim-stream":
         serve_trim_stream(args.graph, ticks=args.ticks,
                           batch=args.update_batch,
-                          instrument=args.instrument, trace=args.trace)
+                          instrument=args.instrument, trace=args.trace,
+                          metrics_port=args.metrics_port,
+                          slo_ms=args.slo_ms,
+                          metrics_hold=args.metrics_hold,
+                          metrics_json=args.metrics_json)
         return
     if args.arch is None:
         ap.error("--arch is required for --app model")

@@ -196,20 +196,38 @@ def main():
                                                       "stream", "peel"))
     ap.add_argument("--reach-backend", default="windowed",
                     choices=("dense", "windowed"))
+    ap.add_argument("--metrics-json", metavar="PATH",
+                    help="collect MetricsPlane telemetry for the run and "
+                         "dump the JSON snapshot to PATH (any --app)")
     args = ap.parse_args()
     if args.app == "scc" and args.backend == "sharded":
         ap.error("--app scc needs a batchable trim backend "
                  "(--backend dense or windowed); shard at the region level")
-    if args.dryrun:
-        run_dryrun(args.method)
-    elif args.app == "scc":
-        run_scc(args.graph, args.method, args.backend, args.reach_backend)
-    elif args.app == "stream":
-        run_stream(args.graph)
-    elif args.app == "peel":
-        run_peel(args.graph)
-    else:
-        run_local(args.graph, args.method, args.workers, args.backend)
+
+    import contextlib
+
+    from .. import obs
+
+    scope = (obs.collecting_metrics() if args.metrics_json
+             else contextlib.nullcontext(None))
+    with scope as plane:
+        if args.dryrun:
+            run_dryrun(args.method)
+        elif args.app == "scc":
+            run_scc(args.graph, args.method, args.backend,
+                    args.reach_backend)
+        elif args.app == "stream":
+            run_stream(args.graph)
+        elif args.app == "peel":
+            run_peel(args.graph)
+        else:
+            run_local(args.graph, args.method, args.workers, args.backend)
+    if plane is not None:
+        import json
+        with open(args.metrics_json, "w") as f:
+            json.dump(plane.snapshot(), f, indent=1)
+        print(f"[trim] metrics snapshot: {args.metrics_json} "
+              f"({len(plane.families)} families)")
 
 
 if __name__ == "__main__":

@@ -1,6 +1,6 @@
-"""Observability subsystem (DESIGN.md §11).
+"""Observability subsystem (DESIGN.md §11, §13).
 
-Three layers, all opt-in and all zero-cost when off:
+Four layers, all opt-in and all zero-cost when off:
 
 * **device-resident fixpoint telemetry** (``obs.stats``) — per-round
   stats (frontier size, edges traversed, counter decrements) threaded
@@ -13,19 +13,40 @@ Three layers, all opt-in and all zero-cost when off:
   ``EngineBase._dispatch`` is wrapped in a structured span (engine
   family, plan signature, wall time, compile-vs-execute attribution)
   collected by a process-global :class:`Recorder`.  The default global
-  recorder is disabled; install one with :func:`recording`.
+  recorder is disabled; install one with :func:`recording` (nested
+  scopes tee spans to both recorders).
+* **continuous metrics** (``obs.metrics`` + ``obs.memory`` +
+  ``obs.profile``) — the process-global :class:`MetricsPlane`: labeled
+  counters/gauges/histograms with OpenMetrics exposition, per-engine
+  live-buffer byte gauges, XLA plan cost analysis, and the SLO tracker
+  behind ``launch/serve.py``'s ``/metrics`` endpoint.  Disabled by
+  default; install one with :func:`collecting_metrics`.
 * **exporters** (``obs.export``) — JSONL (one span per line) and
   chrome://tracing ``traceEvents`` JSON, both round-trippable.
 """
 from .export import (read_chrome_trace, read_jsonl, to_chrome_trace,
                      to_jsonl)
-from .recorder import (Recorder, Span, get_recorder, instant, note_kernel,
-                       recording, set_recorder, span)
+from .memory import (array_nbytes, device_memory_stats, engine_nbytes,
+                     publish_device_memory, publish_engine_memory)
+from .metrics import (LABEL_CARDINALITY_CAP, MetricsPlane, MetricsServer,
+                      RetraceStormWarning, SLOTracker, collecting_metrics,
+                      get_plane, load_snapshot, log_buckets,
+                      parse_openmetrics, set_plane)
+from .profile import normalize_cost, plan_cost_of, record_plan_cost
+from .recorder import (Recorder, Span, TeeRecorder, get_recorder, instant,
+                       note_kernel, recording, set_recorder, span)
 from .stats import RoundStats, round_capacity, stats_init, stats_record
 
 __all__ = [
-    "Recorder", "Span", "get_recorder", "set_recorder", "recording",
-    "span", "instant", "note_kernel",
+    "Recorder", "Span", "TeeRecorder", "get_recorder", "set_recorder",
+    "recording", "span", "instant", "note_kernel",
     "RoundStats", "round_capacity", "stats_init", "stats_record",
+    "MetricsPlane", "MetricsServer", "SLOTracker", "RetraceStormWarning",
+    "LABEL_CARDINALITY_CAP", "get_plane", "set_plane",
+    "collecting_metrics", "load_snapshot", "log_buckets",
+    "parse_openmetrics",
+    "array_nbytes", "device_memory_stats", "engine_nbytes",
+    "publish_engine_memory", "publish_device_memory",
+    "normalize_cost", "plan_cost_of", "record_plan_cost",
     "to_jsonl", "read_jsonl", "to_chrome_trace", "read_chrome_trace",
 ]

@@ -1,0 +1,100 @@
+"""Memory accounting for the MetricsPlane (DESIGN.md §13).
+
+Every engine owns long-lived buffers — the graph arrays, a cached
+transpose, plan caches (worker ids, row ids, shard operands), and for
+the stream engine the whole DeltaCSR overlay.  This module turns those
+into byte gauges without ever syncing the device: array bytes come from
+static shape × dtype (``size * itemsize``), which jax exposes without
+materializing the data.
+
+Two sources:
+
+* **engine accounting** — the ``nbytes_breakdown()`` protocol on
+  :class:`~repro.core.enginebase.EngineBase` (each family lists its
+  live components); published as
+  ``repro_engine_live_bytes{family=...,component=...}``.
+* **allocator accounting** — ``jax`` device memory stats
+  (:func:`device_memory_stats`) where the backend reports them (TPU/GPU;
+  the CPU backend returns nothing), published as
+  ``repro_device_memory_bytes{device=...,key=...}``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import numpy as np
+
+
+def array_nbytes(tree) -> int:
+    """Total bytes of every array leaf in a pytree (device or numpy).
+
+    Computed from static shape and dtype only — no device sync.  Non-
+    array leaves (ints, None, strings) contribute 0.
+    """
+    import jax
+
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        shape = getattr(leaf, "shape", None)
+        dtype = getattr(leaf, "dtype", None)
+        if shape is None or dtype is None:
+            continue
+        total += int(np.prod(shape, dtype=np.int64)) * np.dtype(dtype).itemsize
+    return total
+
+
+def device_memory_stats() -> Dict[str, Dict[str, int]]:
+    """Per-device allocator stats from ``Device.memory_stats()``.
+
+    Returns ``{device_label: {stat_key: bytes}}``; empty where the
+    backend does not report (CPU), never raises.
+    """
+    import jax
+
+    out: Dict[str, Dict[str, int]] = {}
+    for d in jax.local_devices():
+        try:
+            stats = d.memory_stats()
+        except Exception:
+            stats = None
+        if stats:
+            out[f"{d.platform}:{d.id}"] = {
+                k: int(v) for k, v in stats.items()
+                if isinstance(v, (int, np.integer))}
+    return out
+
+
+def engine_nbytes(engine) -> Dict[str, int]:
+    """The engine's live-buffer breakdown via its ``nbytes_breakdown()``
+    protocol (zero-byte components dropped)."""
+    return {k: v for k, v in engine.nbytes_breakdown().items() if v}
+
+
+def publish_engine_memory(plane, engine) -> None:
+    """Set the per-component live-buffer gauges for one engine."""
+    fam = plane.gauge(
+        "repro_engine_live_bytes",
+        "live device/host buffer bytes held by an engine, by component "
+        "(static shape x dtype; no device sync)")
+    total = 0
+    for component, nbytes in engine.nbytes_breakdown().items():
+        fam.set(nbytes, family=engine.family, component=component)
+        total += nbytes
+    fam.set(total, family=engine.family, component="total")
+
+
+def publish_device_memory(plane) -> None:
+    """Set allocator gauges where the backend reports them (no-op on
+    CPU)."""
+    stats = device_memory_stats()
+    if not stats:
+        return
+    fam = plane.gauge("repro_device_memory_bytes",
+                      "jax device allocator stats (backend-reported)")
+    for device, kv in stats.items():
+        for key, v in kv.items():
+            fam.set(v, device=device, key=key)
+
+
+__all__ = ["array_nbytes", "device_memory_stats", "engine_nbytes",
+           "publish_engine_memory", "publish_device_memory"]

@@ -29,6 +29,7 @@ import time
 from typing import Any, Dict, List, Optional
 
 from . import export as _export
+from . import metrics as _metrics
 
 
 @dataclasses.dataclass
@@ -134,6 +135,72 @@ class Recorder:
         return f"Recorder({state}, spans={len(self.spans)})"
 
 
+class TeeRecorder(Recorder):
+    """Records into a ``primary`` recorder while forwarding every event
+    to additional target recorders.
+
+    This is how nested :func:`recording` scopes compose: the inner scope
+    installs a tee over (inner, outer) so the inner recorder sees only
+    its own scope while the outer recorder's timeline stays gap-free.
+    Queries and exporters read the primary's spans; each target gets a
+    copy stamped against its own epoch.
+    """
+
+    def __init__(self, primary: Recorder, *others: Recorder):
+        self.primary = primary
+        self.others = tuple(others)
+        self.enabled = True
+
+    @property
+    def epoch(self) -> float:
+        return self.primary.epoch
+
+    @property
+    def spans(self) -> List[Span]:
+        return self.primary.spans
+
+    def clear(self) -> None:
+        self.primary.clear()
+
+    @contextlib.contextmanager
+    def span(self, name: str, cat: str = "span", **attrs):
+        t0 = time.perf_counter()
+        sp = Span(name=name, cat=cat, ts=t0 - self.primary.epoch,
+                  attrs=dict(attrs))
+        try:
+            yield sp
+        finally:
+            sp.dur = time.perf_counter() - t0
+            self.primary.spans.append(sp)
+            for rec in self.others:
+                # attrs may have been filled in from inside the body;
+                # forward the final contents.
+                rec.add(sp.name, sp.cat, ts=t0, dur=sp.dur, **sp.attrs)
+
+    def add(self, name: str, cat: str = "span", *, ts: float, dur: float,
+            **attrs) -> Optional[Span]:
+        sp = self.primary.add(name, cat, ts=ts, dur=dur, **attrs)
+        for rec in self.others:
+            rec.add(name, cat, ts=ts, dur=dur, **attrs)
+        return sp
+
+    def instant(self, name: str, cat: str = "instant",
+                **attrs) -> Optional[Span]:
+        t0 = time.perf_counter()
+        sp = self.primary.add(name, cat, ts=t0, dur=0.0, **attrs)
+        if sp is not None:
+            sp.ph = "i"
+        for rec in self.others:
+            isp = rec.add(name, cat, ts=t0, dur=0.0, **attrs)
+            if isp is not None:
+                isp.ph = "i"
+        return sp
+
+    def __repr__(self):
+        return (f"TeeRecorder(primary={self.primary!r}, "
+                f"others={len(self.others)})")
+
+
 _GLOBAL = Recorder(enabled=False)
 
 
@@ -152,11 +219,23 @@ def set_recorder(rec: Recorder) -> Recorder:
 
 
 @contextlib.contextmanager
-def recording(recorder: Optional[Recorder] = None):
+def recording(recorder: Optional[Recorder] = None, *, tee: bool = True):
     """Install an enabled recorder for the scope of the ``with`` block and
-    restore the previous global on exit.  Yields the recorder."""
+    restore the previous global on exit (exception-safe).  Yields the
+    recorder.
+
+    Nested scopes compose: when an enabled recorder is already installed
+    and ``tee=True`` (the default), the scope installs a
+    :class:`TeeRecorder` so spans land in *both* the new recorder and
+    the enclosing one.  Pass ``tee=False`` for last-wins isolation (the
+    outer recorder sees a gap for the inner scope's duration).
+    """
     rec = Recorder() if recorder is None else recorder
-    prev = set_recorder(rec)
+    prev = get_recorder()
+    if tee and prev.enabled and prev is not rec:
+        set_recorder(TeeRecorder(rec, prev))
+    else:
+        set_recorder(rec)
     try:
         yield rec
     finally:
@@ -176,6 +255,15 @@ def note_kernel(kernel: str, **attrs) -> None:
     """Trace-time kernel-selection note, called by the ``kernels.ops``
     wrappers.  Inside a jitted caller this Python code runs at *trace*
     time only, so each instant event marks a kernel choice being baked
-    into a fresh executable — retrace attribution for free."""
+    into a fresh executable — retrace attribution for free.  The
+    MetricsPlane counts the same events as
+    ``repro_kernel_traces{kernel=,use_kernel=}``."""
     if _GLOBAL.enabled:
         _GLOBAL.instant(kernel, cat="kernel", **attrs)
+    plane = _metrics.get_plane()
+    if plane.enabled:
+        plane.counter(
+            "repro_kernel_traces",
+            "kernel-choice trace events from the ops wrappers (one per "
+            "kernel baked into a fresh executable)",
+        ).inc(kernel=kernel, use_kernel=str(attrs.get("use_kernel", "")))

@@ -271,7 +271,7 @@ def test_round_capacity():
 
 def _doc(**over):
     d = {
-        "schema": 2, "bench": "obs", "smoke": True,
+        "schema": 3, "bench": "obs", "smoke": True,
         "env": {"jax_version": "0.4.37", "backend": "cpu",
                 "device_kind": "cpu", "device_count": 1,
                 "python": "3.11", "commit": "abc"},
@@ -387,3 +387,312 @@ def test_compare_docs_rejects_malformed():
     assert verdict == Verdict.FAIL and "schema" in msgs[0]
     wrong = _doc(bench="peel")
     assert compare_docs(_doc(), wrong)[0] == Verdict.FAIL
+    stale = _doc(schema=2)                     # pre-telemetry-gate layout
+    verdict, msgs = compare_docs(stale, _doc())
+    assert verdict == Verdict.FAIL and "schema" in msgs[0]
+
+
+def test_compare_docs_gates_telemetry_keys_exactly():
+    """rounds / edges_total / max_per_worker / imbalance are deterministic
+    device telemetry: any drift on a matching workload is a FAIL, not a
+    tolerance-band pass (schema 3 contract)."""
+    for key, drifted in (("rounds", 9), ("edges_total", 43),
+                         ("max_per_worker", 5), ("imbalance", 1.5)):
+        base = _doc()
+        base["families"]["ER"].update(rounds=8, edges_total=42,
+                                      max_per_worker=4, imbalance=1.25)
+        moved = copy.deepcopy(base)
+        moved["families"]["ER"][key] = drifted
+        assert compare_docs(base, base)[0] == Verdict.OK
+        verdict, msgs = compare_docs(base, moved)
+        assert verdict == Verdict.FAIL and any(key in m for m in msgs), key
+
+
+# -- MetricsPlane: labeled metrics, exposition, snapshot ----------------------
+
+def test_histogram_percentiles_exact_vs_numpy():
+    plane = obs.MetricsPlane()
+    hist = plane.histogram("t_seconds", "test latencies")
+    rng = np.random.default_rng(11)
+    samples = rng.lognormal(-6, 2, size=500)
+    for s in samples:
+        hist.observe(float(s), family="trim")
+    child = hist.labels(family="trim")
+    for q, attr in ((50, "p50"), (95, "p95"), (99, "p99")):
+        assert getattr(child, attr) == pytest.approx(
+            np.percentile(samples, q), rel=0, abs=0), q
+    assert child.count == 500
+    assert child.sum == pytest.approx(samples.sum())
+    # bucket counts are complete: every sample landed somewhere
+    assert sum(child.counts) == 500
+
+
+def test_histogram_ring_is_bounded():
+    plane = obs.MetricsPlane()
+    hist = plane.histogram("t_seconds", "", ring=16)
+    for i in range(100):
+        hist.observe(float(i))
+    child = hist.labels()
+    assert child.count == 100                  # totals keep everything
+    assert len(child.ring) == 16               # percentiles use the window
+    assert child.p50 == pytest.approx(np.percentile(np.arange(84, 100), 50))
+
+
+def test_label_cardinality_cap_folds_into_overflow():
+    plane = obs.MetricsPlane()
+    c = plane.counter("things", "")
+    cap = obs.LABEL_CARDINALITY_CAP
+    for i in range(cap + 6):
+        c.inc(worker=str(i))
+    # cap distinct children + the single overflow child
+    assert len(c.children) == cap + 1
+    assert c.labels(overflow="true").value == 6
+    dropped = plane.families["repro_metric_labels_dropped"]
+    assert dropped.labels(metric="things").value == 6
+
+
+def test_counter_name_rejects_total_suffix():
+    plane = obs.MetricsPlane()
+    with pytest.raises(ValueError):
+        plane.counter("things_total", "")
+    with pytest.raises(ValueError):
+        plane.counter("bad name", "")
+    # kind mismatch on re-registration raises
+    plane.counter("x", "")
+    with pytest.raises(ValueError):
+        plane.gauge("x", "")
+
+
+def test_openmetrics_exposition_round_trips():
+    plane = obs.MetricsPlane()
+    plane.counter("repro_dispatches", "dispatch count").inc(
+        3, family="trim")
+    plane.gauge("repro_engine_live_bytes", "live").set(
+        1024, family="trim", component="total")
+    h = plane.histogram("repro_dispatch_latency_seconds", "lat")
+    h.observe(0.002, family="trim", phase="execute")
+    h.observe(3.5, family="trim", phase="compile")
+    text = plane.to_openmetrics()
+    doc = obs.parse_openmetrics(text)
+    # counters are exposed with the _total suffix
+    assert doc["repro_dispatches_total"]["type"] == "counter"
+    [(s, labels, v)] = doc["repro_dispatches_total"]["samples"]
+    assert (labels, v) == ({"family": "trim"}, 3.0)
+    assert doc["repro_engine_live_bytes"]["type"] == "gauge"
+    hist = doc["repro_dispatch_latency_seconds"]
+    assert hist["type"] == "histogram"
+    # per child: one _bucket line per bound + +Inf, then _sum and _count
+    infs = [(s, labels, v) for s, labels, v in hist["samples"]
+            if labels.get("le") == "+Inf"]
+    assert [v for _, _, v in infs] == [1.0, 1.0]
+    counts = [(labels, v) for s, labels, v in hist["samples"]
+              if s.endswith("_count")]
+    assert all(v == 1.0 for _, v in counts) and len(counts) == 2
+    # bucket counts are cumulative and end at the total
+    exec_buckets = [v for s, labels, v in hist["samples"]
+                    if s.endswith("_bucket")
+                    and labels.get("phase") == "execute"]
+    assert exec_buckets == sorted(exec_buckets)
+
+
+def test_snapshot_round_trip_is_exposition_identical():
+    plane = obs.MetricsPlane()
+    plane.counter("c", "help c").inc(7, k="v")
+    plane.gauge("g", "help g").set(2.5)
+    plane.histogram("h_seconds", "help h").observe(0.01, phase="execute")
+    snap = json.loads(json.dumps(plane.snapshot()))   # through real JSON
+    assert snap["metrics_schema"] == 1
+    clone = obs.load_snapshot(snap)
+    assert clone.to_openmetrics() == plane.to_openmetrics()
+    # percentile state survives too (ring is serialized)
+    assert clone.histogram("h_seconds").labels(phase="execute").p50 == \
+        pytest.approx(0.01)
+    with pytest.raises(ValueError):
+        obs.load_snapshot({"metrics_schema": 99, "families": {}})
+
+
+# -- MetricsPlane: engine integration -----------------------------------------
+
+def test_disabled_plane_zero_overhead_bit_identical():
+    """The default (disabled) plane changes nothing: identical status
+    bits, identical dispatch/trace counters, zero extra retraces."""
+    from repro.core.enginebase import _TRACE_COUNT
+    g = generators.erdos_renyi(141, 420, seed=13)
+    plan(g, method="ac4", instrument=True).run()   # warm the jit cache
+    assert not obs.get_plane().enabled
+
+    off = plan(g, method="ac4", instrument=True)
+    before = _TRACE_COUNT[0]
+    r_off = off.run()
+    d_off = _TRACE_COUNT[0] - before
+
+    with obs.collecting_metrics() as plane:
+        on = plan(g, method="ac4", instrument=True)
+        before = _TRACE_COUNT[0]
+        r_on = on.run()
+        d_on = _TRACE_COUNT[0] - before
+
+    assert np.array_equal(np.asarray(r_off.status), np.asarray(r_on.status))
+    assert int(r_off.rounds) == int(r_on.rounds)
+    assert (off.dispatches, off.traces, d_off) == \
+        (on.dispatches, on.traces, d_on) == (1, 0, 0)
+    # the disabled path really recorded nothing; the enabled one did
+    assert not obs.get_plane().families.get("repro_dispatches")
+    assert plane.counter("repro_dispatches").labels(family="trim").value == 1
+
+
+def test_enabled_plane_collects_dispatch_and_fixpoint_families():
+    g = generators.erdos_renyi(143, 430, seed=17)    # fresh shape: compiles
+    with obs.collecting_metrics() as plane:
+        engine = plan(g, method="ac4", instrument=True)
+        engine.run()
+        engine.run()
+    lat = plane.families["repro_dispatch_latency_seconds"]
+    phases = {dict(k).get("phase") for k in lat.children}
+    assert phases == {"compile", "execute"}
+    assert plane.counter("repro_dispatches").labels(family="trim").value == 2
+    assert plane.counter("repro_traces").labels(family="trim").value >= 1
+    assert len(plane.families["repro_plan_compiles"].children) == 1
+    # fixpoint telemetry folded from RoundStats
+    assert plane.counter("repro_fixpoint_rounds").labels(
+        family="trim").value > 0
+    work = plane.families["repro_fixpoint_work"]
+    stats = {dict(k)["stat"] for k in work.children}
+    assert {"r_frontier", "r_edges"} <= stats
+    # memory accounting: component gauges + a total
+    mem = plane.families["repro_engine_live_bytes"]
+    comps = {dict(k)["component"] for k in mem.children}
+    assert "graph" in comps and "total" in comps
+    total = mem.labels(family="trim", component="total").value
+    assert total == engine.nbytes() > 0
+    # XLA cost analysis stamped per plan
+    flops = plane.families["repro_plan_cost_flops"]
+    assert all(dict(k)["family"] == "trim" for k in flops.children)
+    assert plane.families["repro_plan_cost_bytes"].labels(
+        family="trim", plan=engine.plan_signature()).value > 0
+
+
+def test_engine_nbytes_breakdown_components():
+    g = generators.erdos_renyi(200, 800, seed=5)
+    engine = plan(g, method="ac4", workers=4, chunk=1)
+    engine.run(counters=True)
+    bd = engine.nbytes_breakdown()
+    assert {"graph", "transpose", "row_ids", "worker_ids"} <= set(bd)
+    assert engine.nbytes() == sum(bd.values()) > 0
+
+    stream = plan_stream(g, capacity=64)
+    stream.retrim(full=True)
+    sbd = stream.nbytes_breakdown()
+    assert any(k.startswith("delta_") for k in sbd)
+    assert sbd["delta_insert_buffers"] > 0
+    assert stream.nbytes() == sum(sbd.values())
+
+
+def test_retrace_storm_warns_once_and_counts():
+    plane = obs.MetricsPlane(retrace_storm_threshold=3)
+    plane.note_compile("trim", "p1")
+    plane.note_compile("trim", "p1")
+    with pytest.warns(obs.RetraceStormWarning):
+        plane.note_compile("trim", "p1")
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("error")               # a second warn would raise
+        plane.note_compile("trim", "p1")
+    assert plane.counter("repro_retrace_storms").labels(
+        family="trim").value == 1
+    assert plane.counter("repro_plan_compiles").labels(
+        family="trim", plan="p1").value == 4
+
+
+def test_slo_tracker_breach_counting():
+    plane = obs.MetricsPlane()
+    slo = obs.SLOTracker(0.010, window=16, min_samples=4, name="tick",
+                         plane=plane)
+    for _ in range(8):
+        assert slo.observe(0.001) is False
+    assert slo.breaches == 0 and not slo.breached
+    for _ in range(8):
+        slo.observe(0.050)                     # p99 now over target
+    assert slo.breached and slo.breaches > 0
+    assert plane.gauge("repro_slo_p99_seconds").labels(
+        slo="tick").value > 0.010
+    assert plane.gauge("repro_slo_target_seconds").labels(
+        slo="tick").value == pytest.approx(0.010)
+    assert plane.counter("repro_slo_breaches").labels(
+        slo="tick").value == slo.breaches
+
+
+def test_metrics_server_serves_openmetrics_and_health():
+    import urllib.request
+    plane = obs.MetricsPlane()
+    plane.counter("repro_dispatches", "").inc(family="trim")
+    plane.histogram("repro_dispatch_latency_seconds", "").observe(
+        0.001, family="trim", phase="execute")
+    server = obs.MetricsServer(0, plane_getter=lambda: plane,
+                               health_getter=lambda: {"status": "serving"})
+    try:
+        base = f"http://127.0.0.1:{server.port}"
+        body = urllib.request.urlopen(f"{base}/metrics").read().decode()
+        assert "repro_dispatch_latency_seconds_bucket" in body
+        assert "repro_dispatches_total" in body
+        assert obs.parse_openmetrics(body)     # scrapeable
+        health = json.loads(urllib.request.urlopen(
+            f"{base}/healthz").read())
+        assert health == {"status": "serving"}
+        with pytest.raises(urllib.error.HTTPError):
+            urllib.request.urlopen(f"{base}/nope")
+    finally:
+        server.close()
+
+
+# -- recording(): exception restore + nested tee ------------------------------
+
+def test_recording_restores_previous_recorder_on_exception():
+    baseline = obs.get_recorder()
+    with pytest.raises(RuntimeError):
+        with obs.recording():
+            assert obs.get_recorder() is not baseline
+            raise RuntimeError("boom")
+    assert obs.get_recorder() is baseline
+    # nested scopes unwind in order under exceptions too
+    with obs.recording() as outer:
+        with pytest.raises(RuntimeError):
+            with obs.recording():
+                raise RuntimeError("inner boom")
+        assert obs.get_recorder().spans is outer.spans
+    assert obs.get_recorder() is baseline
+
+
+def test_recording_nested_scopes_tee_spans_to_both():
+    with obs.recording() as outer:
+        with obs.span("before", cat="t"):
+            pass
+        with obs.recording() as inner:
+            with obs.span("shared", cat="t", k=1):
+                pass
+            obs.instant("mark", cat="t")
+        with obs.span("after", cat="t"):
+            pass
+    # the inner recorder saw only its own scope
+    assert [sp.name for sp in inner.spans] == ["shared", "mark"]
+    # the outer recorder saw everything, including the teed copies
+    names = [sp.name for sp in outer.spans]
+    assert names.count("shared") == 1 and names.count("mark") == 1
+    assert "before" in names and "after" in names
+    teed = next(sp for sp in outer.spans if sp.name == "shared")
+    orig = next(sp for sp in inner.spans if sp.name == "shared")
+    assert teed.attrs == orig.attrs
+    assert teed.dur == pytest.approx(orig.dur, abs=1e-9)
+    # timestamps stay on the outer epoch: ordered with its own spans
+    b = next(sp for sp in outer.spans if sp.name == "before")
+    a = next(sp for sp in outer.spans if sp.name == "after")
+    assert b.ts <= teed.ts <= a.ts
+
+
+def test_recording_tee_optout():
+    with obs.recording() as outer:
+        with obs.recording(tee=False) as inner:
+            with obs.span("quiet", cat="t"):
+                pass
+    assert [sp.name for sp in inner.spans] == ["quiet"]
+    assert [sp.name for sp in outer.spans] == []
