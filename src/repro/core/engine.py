@@ -207,6 +207,26 @@ class TrimEngine(EngineBase):
             sig += f"+frontier[{self.fplan.mode}]"
         return sig + "+stats" if self.instrument else sig
 
+    # -- checkpoint/resume (DESIGN.md §14) ---------------------------------
+    def _plan_kwargs(self):
+        if self.mesh is not None:
+            raise ValueError(
+                "sharded trim engines with an explicit mesh are not "
+                "checkpointable (meshes do not serialize); checkpoint at "
+                "the region level instead")
+        return {"method": self.method, "backend": self.backend,
+                "workers": self.workers, "chunk": self.chunk,
+                "window": self.window, "use_kernel": self.use_kernel,
+                "packed": self.packed, "unmasked": self.unmasked,
+                "frontier": self.fplan.mode, "instrument": self.instrument,
+                "max_rounds": (self.max_rounds if self.instrument
+                               else None)}
+
+    def _invalidate_caches(self):
+        self._tarrs = None
+        self._worker_ids = None
+        self._shard = None
+
     # -- cached resources --------------------------------------------------
     def _transpose_arrays(self):
         if not self.spec.needs_transpose:

@@ -46,6 +46,7 @@ from typing import Dict
 import numpy as np
 
 from .. import obs
+from ..fault.plane import get_fault_plane
 from .graph import CSRGraph
 
 # Process-wide count of kernel traces (bumped from inside traced functions,
@@ -121,7 +122,18 @@ class EngineBase:
         """Call a jitted runner, attributing trace deltas and counting the
         dispatch.  Each dispatch is one ``obs`` span (no-op context when
         the global recorder is disabled) and, when the MetricsPlane is
-        enabled, one latency-histogram sample plus counter updates."""
+        enabled, one latency-histogram sample plus counter updates.
+
+        The FaultPlane (DESIGN.md §14) arms two points here:
+        ``"pre-dispatch"`` before the device call, ``"post-dispatch"``
+        after the runner returned but before the engine's accounting
+        commits — so a faulted dispatch, retried, leaves the dispatch/
+        trace counters exactly where a fault-free run would.  The default
+        disabled plane costs one attribute read."""
+        fplane = get_fault_plane()
+        if fplane.enabled:
+            fplane.arm("pre-dispatch", family=self.family,
+                       seq=self._dispatches)
         before = _TRACE_COUNT[0]
         plane = obs.get_plane()
         t0 = time.perf_counter() if plane.enabled else 0.0
@@ -137,6 +149,9 @@ class EngineBase:
             if plane.enabled:
                 self._feed_plane(plane, fn, args, delta,
                                  time.perf_counter() - t0, sp)
+            if fplane.enabled:
+                fplane.arm("post-dispatch", family=self.family,
+                           seq=self._dispatches)
         self._traces += delta
         self._dispatches += 1
         return out
@@ -171,6 +186,66 @@ class EngineBase:
                 if sp is not None:
                     sp.attrs["cost"] = cost
         obs.publish_engine_memory(plane, self)
+
+    # -- checkpoint/resume protocol (DESIGN.md §14) ------------------------
+    def state_dict(self) -> Dict[str, object]:
+        """Checkpointable state as a flat ``{name: array}`` tree.  The
+        base serializes the graph and the transpose cache (if built);
+        subclasses extend with their persistent state.  Everything else
+        an engine holds is a pure function of these arrays plus the plan
+        kwargs in :meth:`state_meta`, so restore is bit-identical."""
+        out = {"graph_indptr": self.graph.indptr,
+               "graph_indices": self.graph.indices}
+        if self._transpose is not None:
+            out["transpose_indptr"] = self._transpose.indptr
+            out["transpose_indices"] = self._transpose.indices
+        return out
+
+    def state_meta(self) -> Dict[str, object]:
+        """JSON-able companion of :meth:`state_dict`: the engine family,
+        the plan kwargs a fresh process needs to re-plan, and the
+        accounting counters (restored so resumed accounting continues
+        where the checkpoint left off)."""
+        return {"family": self.family, "plan": self.plan_signature(),
+                "dispatches": self._dispatches, "traces": self._traces,
+                "transpose_builds": self._transpose_builds,
+                "plan_kwargs": self._plan_kwargs()}
+
+    def _plan_kwargs(self) -> Dict[str, object]:
+        """The kwargs that rebuild this plan (subclasses override)."""
+        return {}
+
+    def load_state(self, tree, meta) -> None:
+        """Overwrite this engine's state with a checkpoint's exact arrays
+        (``tree`` from :meth:`state_dict`/``train.checkpoint.load_flat``,
+        ``meta`` from :meth:`state_meta`).  Derived caches are dropped
+        and rebuilt deterministically from the restored arrays."""
+        import jax.numpy as jnp
+        if meta.get("family") != self.family:
+            raise ValueError(f"checkpoint family {meta.get('family')!r} "
+                             f"does not match engine family "
+                             f"{self.family!r}")
+        self.graph = CSRGraph(
+            jnp.asarray(np.asarray(tree["graph_indptr"]), jnp.int32),
+            jnp.asarray(np.asarray(tree["graph_indices"]), jnp.int32))
+        if "transpose_indptr" in tree:
+            self._transpose = CSRGraph(
+                jnp.asarray(np.asarray(tree["transpose_indptr"]),
+                            jnp.int32),
+                jnp.asarray(np.asarray(tree["transpose_indices"]),
+                            jnp.int32))
+        else:
+            self._transpose = None
+        self._dispatches = int(meta.get("dispatches", 0))
+        self._traces = int(meta.get("traces", 0))
+        self._transpose_builds = int(meta.get("transpose_builds", 0))
+        self._invalidate_caches()
+
+    def _invalidate_caches(self) -> None:
+        """Drop plan caches derived from the graph/transpose arrays so
+        the next run rebuilds them from the restored state (subclasses
+        override; rebuilds are deterministic, so results stay
+        bit-identical)."""
 
     def _publish_round_stats(self, rs) -> None:
         """Fold one run's :class:`~repro.obs.stats.RoundStats` into the

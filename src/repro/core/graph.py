@@ -355,6 +355,53 @@ class DeltaCSR:
         """Total overlay bytes (base graph excluded)."""
         return sum(self.nbytes_breakdown().values())
 
+    # -- checkpoint/resume (DESIGN.md §14) ---------------------------------
+    def state_dict(self) -> dict:
+        """The overlay's checkpointable arrays: base CSR, tombstone mask,
+        and insert buffers (device copies — the host mirrors are kept in
+        sync by construction, property-tested, and are rebuilt from these
+        on :meth:`load_state`)."""
+        return {"base_indptr": self.base.indptr,
+                "base_indices": self.base.indices,
+                "tomb": self.tomb, "ins_src": self.ins_src,
+                "ins_dst": self.ins_dst, "ins_alive": self.ins_alive}
+
+    def state_meta(self) -> dict:
+        """JSON side of :meth:`state_dict` (sizing + slot accounting)."""
+        return {"capacity": self.capacity, "load_factor": self.load_factor,
+                "n_ins": self.n_ins, "n_tomb": self.n_tomb}
+
+    def load_state(self, tree: dict, meta: dict) -> None:
+        """Overwrite this overlay with a checkpoint's exact state: the
+        base is rebuilt from the saved CSR arrays (no re-sort — edge
+        order, and therefore every derived permutation, is preserved),
+        the host mirrors are reconstructed from the saved device arrays,
+        and the slot accounting comes from ``meta``."""
+        base = CSRGraph(jnp.asarray(np.asarray(tree["base_indptr"]),
+                                    jnp.int32),
+                        jnp.asarray(np.asarray(tree["base_indices"]),
+                                    jnp.int32))
+        self.capacity = int(meta["capacity"])
+        self.load_factor = float(meta["load_factor"])
+        self._rebase(base)              # empty overlay at saved capacity
+        tomb = np.asarray(tree["tomb"], bool)
+        ins_src = np.asarray(tree["ins_src"])
+        ins_dst = np.asarray(tree["ins_dst"])
+        ins_alive = np.asarray(tree["ins_alive"], bool)
+        if tomb.shape != (base.m,) or ins_src.shape != (self.capacity,):
+            raise ValueError("checkpoint overlay shapes do not match the "
+                             "saved base/capacity")
+        self._tomb_np = tomb.copy()
+        self._ins_src_np = ins_src.astype(np.int64)
+        self._ins_dst_np = ins_dst.astype(np.int64)
+        self._ins_alive_np = ins_alive.copy()
+        self.n_ins = int(meta["n_ins"])
+        self.n_tomb = int(meta["n_tomb"])
+        self.tomb = jnp.asarray(tomb)
+        self.ins_src = jnp.asarray(ins_src, jnp.int32)
+        self.ins_dst = jnp.asarray(ins_dst, jnp.int32)
+        self.ins_alive = jnp.asarray(ins_alive)
+
     # -- host-side bookkeeping (the engine drives these) -------------------
     def resolve_deletions(self, src, dst):
         """Resolve a deletion batch to concrete edge instances and mark the

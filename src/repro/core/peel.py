@@ -384,6 +384,16 @@ class PeelEngine(EngineBase):
                f"+frontier[{self.fplan.mode}]")
         return sig + "+stats" if self.instrument else sig
 
+    # -- checkpoint/resume (DESIGN.md §14) ---------------------------------
+    def _plan_kwargs(self):
+        return {"method": self.method, "use_kernel": self.use_kernel,
+                "frontier": self.fplan.mode, "instrument": self.instrument,
+                "max_rounds": (self.max_rounds if self.instrument
+                               else None)}
+
+    def _invalidate_caches(self):
+        self._tarrs = None
+
     # -- cached resources --------------------------------------------------
     def _transpose_arrays(self):
         if self._tarrs is None:

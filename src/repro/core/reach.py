@@ -455,6 +455,19 @@ class ReachEngine(EngineBase):
                f"+frontier[{self.fplan.mode}]")
         return sig + "+stats" if self.instrument else sig
 
+    # -- checkpoint/resume (DESIGN.md §14) ---------------------------------
+    def _plan_kwargs(self):
+        return {"backend": self.backend, "window": self.window,
+                "use_kernel": self.use_kernel,
+                "frontier": self.fplan.mode, "instrument": self.instrument,
+                "max_rounds": (self.max_rounds if self.instrument
+                               else None)}
+
+    def _invalidate_caches(self):
+        self._garrs = None
+        self._tarrs = None
+        self._overflow = None
+
     # -- cached arrays -----------------------------------------------------
     def _graph_arrays(self):
         if self._garrs is None:

@@ -147,7 +147,10 @@ def scc_decompose(graph: CSRGraph, use_trim: bool = True,
                   active=None, trim2: bool = True, workers: int = 1,
                   chunk: int = 4096, frontier: str = "auto",
                   instrument: bool = False,
-                  max_rounds: int | None = None):
+                  max_rounds: int | None = None,
+                  checkpoint_dir: str | None = None,
+                  checkpoint_every: int = 0, checkpointer=None,
+                  resume: bool = False):
     """Return (labels, stats). labels: (n,) int64 component ids (dense).
 
     ``active`` restricts decomposition to an induced subgraph: only
@@ -211,6 +214,17 @@ def scc_decompose(graph: CSRGraph, use_trim: bool = True,
     ``obs.span`` (cat ``"scc"``) with its region count when a recorder is
     active, so one ``obs.recording()`` around the call yields the full
     per-generation trace.
+
+    ``checkpoint_dir`` + ``checkpoint_every=k`` (DESIGN.md §14) save the
+    generation-level driver state — labels, the pending region worklist,
+    the label counter, and the stats scalars — every k completed
+    generations plus once at the end, through the manifest-based
+    ``train.checkpoint`` writer (``checkpointer`` hands the IO to an
+    ``AsyncCheckpointer``).  ``resume=True`` restores the latest
+    checkpoint and continues; generations are atomic and deterministic
+    from (labels, regions, next_label, generation parity — the trim
+    direction alternates by generation), so a resumed run's labels are
+    bit-identical to an uninterrupted run with the same arguments.
     """
     import jax.numpy as jnp
 
@@ -271,7 +285,45 @@ def scc_decompose(graph: CSRGraph, use_trim: bool = True,
                          f"{region0.shape}")
     regions = [region0] if region0.any() else []
 
+    # -- generation-level checkpoint/resume (DESIGN.md §14) ----------------
+    ckpt_on = checkpoint_dir is not None and checkpoint_every > 0
+    last_saved = -1
+
+    def _save_gen(gens):
+        from ..fault.ckpt import save_tree
+        tree = {"labels": labels,
+                "regions": (np.stack(regions) if regions
+                            else np.zeros((0, n), bool))}
+        if counters:
+            tree["per_worker_edges"] = stats["per_worker_edges"]
+        drv_stats = {k: v for k, v in stats.items()
+                     if k != "per_worker_edges"}
+        save_tree(checkpoint_dir, gens, tree,
+                  {"driver": {"kind": "scc", "next_label": next_label,
+                              "stats": drv_stats}},
+                  checkpointer=checkpointer)
+
+    if resume and checkpoint_dir is not None:
+        from ..train import checkpoint as _ckpt
+        last = _ckpt.latest_step(checkpoint_dir)
+        if last is not None:
+            tree, _, meta = _ckpt.load_flat(checkpoint_dir, last)
+            drv = meta["driver"]
+            labels = jnp.asarray(np.asarray(tree["labels"]), jnp.int32)
+            regions = [r.copy() for r in np.asarray(tree["regions"], bool)
+                       if r.any()]
+            next_label = int(drv["next_label"])
+            stats.update(drv["stats"])
+            if counters:
+                stats["per_worker_edges"] = np.asarray(
+                    tree["per_worker_edges"], np.int64).copy()
+            last_saved = last
+
     while regions:
+        if ckpt_on and stats["generations"] > max(last_saved, 0) \
+                and stats["generations"] % checkpoint_every == 0:
+            last_saved = stats["generations"]
+            _save_gen(last_saved)
         stats["generations"] += 1
         n_regions = len(regions)
         live_host = _pad_pow2(np.stack(regions))          # (B, n), disjoint
@@ -395,6 +447,11 @@ def scc_decompose(graph: CSRGraph, use_trim: bool = True,
         if gen_sp is not None:
             gen_sp.attrs["pivots"] = B
         gen_span.__exit__(None, None, None)
+
+    if ckpt_on and stats["generations"] != last_saved:
+        # final state: empty worklist, all labels assigned — a resumed
+        # run restores it and returns without replaying any generation
+        _save_gen(stats["generations"])
 
     labels = np.asarray(labels).astype(np.int64)   # the one materialization
     assert ((labels >= 0) | ~region0).all()

@@ -49,6 +49,7 @@ import functools
 import numpy as np
 
 from .. import obs
+from ..fault.plane import get_fault_plane
 from .common import FrontierPlan, frontier_plan
 from .enginebase import _TRACE_COUNT, EngineBase
 from .graph import CSRGraph, DeltaCSR, TrimResult, _pow2, \
@@ -526,6 +527,15 @@ class StreamEngine(EngineBase):
         # validate the whole batch before anything commits: a bad
         # insertion must not leave the deletions half-applied
         isrc, idst = check_edge_ids(d.n, isrc, idst)
+        # fault point "mid-update-batch" (DESIGN.md §14): the batch is
+        # validated but nothing — host mirror or device — has committed,
+        # so a fault here is retry-safe with the same batch.  Past this
+        # point the host mirrors mutate before the dispatch, and recovery
+        # must restore from a checkpoint instead.
+        fplane = get_fault_plane()
+        if fplane.enabled:
+            fplane.arm("mid-update-batch", family=self.family,
+                       deletions=int(dsrc.size), insertions=int(isrc.size))
         if d.n_ins + isrc.size > d.capacity:
             self.compact()          # free the insert buffer first
             if isrc.size > d.capacity:
@@ -580,6 +590,63 @@ class StreamEngine(EngineBase):
         return TrimResult(status=status.astype(jnp.int32),
                           rounds=self._rounds_total,
                           round_stats=self._last_stats)
+
+    # -- checkpoint/resume (DESIGN.md §14) ---------------------------------
+    def state_dict(self):
+        """DeltaCSR overlay (base + tombstones + insert buffers) plus the
+        persistent AC-4 fixpoint state.  The base's ``graph_*``/transpose
+        keys are replaced by the overlay's own serialization — the base
+        CSR *is* the graph, and the transpose/permutation caches are
+        rebuilt deterministically from the restored host mirrors."""
+        out = dict(self.delta.state_dict())
+        out["status"] = self._state[0]
+        out["counters"] = self._state[1]
+        out["rounds_total"] = self._rounds_total
+        return out
+
+    def state_meta(self):
+        meta = super().state_meta()
+        meta["delta"] = self.delta.state_meta()
+        meta["compactions"] = self._compactions
+        return meta
+
+    def _plan_kwargs(self):
+        return {"method": self.method, "backend": self.backend,
+                "capacity": self.delta.capacity,
+                "load_factor": self.delta.load_factor,
+                "use_kernel": self.use_kernel,
+                "frontier": self.fplan.mode, "instrument": self.instrument,
+                "max_rounds": (self.max_rounds if self.instrument
+                               else None)}
+
+    def load_state(self, tree, meta):
+        """Overwrite overlay + fixpoint state with a checkpoint's exact
+        arrays.  The AC-4 counters are path-dependent on dead vertices
+        (a dead vertex's counter freezes wherever propagation left it),
+        so they are restored verbatim rather than recomputed — resume is
+        bit-identical to the uninterrupted engine, counters included."""
+        import jax.numpy as jnp
+        if meta.get("family") != self.family:
+            raise ValueError(f"checkpoint family {meta.get('family')!r} "
+                             f"does not match engine family "
+                             f"{self.family!r}")
+        self.delta.load_state(tree, meta["delta"])
+        self.graph = self.delta.base
+        self._state = (jnp.asarray(np.asarray(tree["status"], bool)),
+                       jnp.asarray(np.asarray(tree["counters"]),
+                                   jnp.int32))
+        self._rounds_total = jnp.asarray(
+            np.asarray(tree["rounds_total"]), jnp.int32)
+        self._dispatches = int(meta.get("dispatches", 0))
+        self._traces = int(meta.get("traces", 0))
+        self._transpose_builds = int(meta.get("transpose_builds", 0))
+        self._compactions = int(meta.get("compactions", 0))
+        self._last_stats = None
+        self._transpose = None
+        self._invalidate_caches()
+
+    def _invalidate_caches(self):
+        self._tarrs = None
 
     def snapshot(self) -> CSRGraph:
         """Materialize the current graph (base minus tombstones plus live

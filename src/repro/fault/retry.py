@@ -1,0 +1,60 @@
+"""Bounded exponential-backoff retry around fault-prone calls.
+
+The launchers (``launch/serve.py``, ``launch/trim.py``) wrap their
+dispatch loops with :func:`call_with_retries`: injected (or real)
+``DeviceFault``/``IOFault`` exceptions are retried with exponential
+backoff up to a hard bound, and a retried call that eventually succeeds
+reports a ``"retry"`` recovery to the FaultPlane (feeding the
+``repro_recoveries`` metric family).  Anything past the bound re-raises —
+the caller escalates to restore-from-checkpoint or crashes honestly.
+
+Only use this around calls that are safe to re-execute: pure engine runs
+(trim/reach/peel) and any code that has not yet committed host state.  A
+``StreamEngine.apply`` that already resolved its batch against the host
+mirrors is *not* retry-safe — serve's recovery path restores from the
+latest checkpoint instead (DESIGN.md §14).
+"""
+from __future__ import annotations
+
+import time
+
+from .plane import get_fault_plane
+from .schedule import DeviceFault, IOFault
+
+
+def backoff_delay(attempt: int, *, base: float = 0.05,
+                  cap: float = 2.0) -> float:
+    """Delay before retry ``attempt`` (0-based): ``base * 2**attempt``,
+    capped."""
+    return min(cap, base * (2 ** attempt))
+
+
+def call_with_retries(fn, *, retries: int = 3, base_delay: float = 0.05,
+                      max_delay: float = 2.0,
+                      retry_on=(DeviceFault, IOFault),
+                      sleep=time.sleep, on_retry=None):
+    """Call ``fn()``; on a ``retry_on`` exception, back off and retry up
+    to ``retries`` times (so at most ``retries + 1`` calls), then
+    re-raise.  ``sleep`` is injectable so tests run without wall-clock
+    delays; ``on_retry(exc, attempt)`` observes each failed attempt."""
+    if retries < 0:
+        raise ValueError(f"retries must be >= 0, got {retries}")
+    last = None
+    for attempt in range(retries + 1):
+        try:
+            out = fn()
+        except retry_on as e:
+            last = e
+            if attempt >= retries:
+                raise
+            if on_retry is not None:
+                on_retry(e, attempt)
+            sleep(backoff_delay(attempt, base=base_delay, cap=max_delay))
+            continue
+        if last is not None:
+            get_fault_plane().record_recovery(
+                getattr(last, "point", "unknown"), "retry")
+        return out
+
+
+__all__ = ["call_with_retries", "backoff_delay"]

@@ -8,6 +8,8 @@ over a synthetic edge-update feed (the graph system this repo is about).
 from __future__ import annotations
 
 import argparse
+import signal
+import threading
 import time
 
 import jax
@@ -89,12 +91,56 @@ _STREAM_GRAPHS = {
 }
 
 
+def _save_serve_ckpt(checkpoint_dir, engine, step, *, alive, pending, rng,
+                     tick, dirty_ticks, checkpointer=None):
+    """Checkpoint the engine plus the feed state the serve loop needs to
+    resume mid-stream: the live-edge mask, the pending re-insertion
+    queue (ragged — stored flat + lengths), and the exact feed RNG state
+    (PCG64 state dicts are plain ints, JSON-safe in the manifest)."""
+    from .. import fault as flt
+
+    pend = [np.asarray(p, np.int64) for p in pending]
+    extra = {
+        "feed_alive": alive.copy(),
+        "feed_pending": (np.concatenate(pend) if pend
+                         else np.zeros(0, np.int64)),
+        "feed_pending_lens": np.asarray([len(p) for p in pend], np.int64),
+    }
+    meta = {"feed": {"tick": int(tick), "dirty_ticks": int(dirty_ticks),
+                     "rng_state": rng.bit_generator.state}}
+    return flt.save_engine(checkpoint_dir, engine, step, extra_tree=extra,
+                           extra_meta=meta, checkpointer=checkpointer)
+
+
+def _load_serve_state(checkpoint_dir):
+    """Rebuild (engine, alive, pending, rng, tick, dirty_ticks) from the
+    latest checkpoint written by :func:`_save_serve_ckpt`."""
+    from .. import fault as flt
+
+    engine, step, tree, meta = flt.restore_engine(checkpoint_dir)
+    feed = meta["feed"]
+    alive = np.asarray(tree["feed_alive"], bool).copy()
+    flat = np.asarray(tree["feed_pending"], np.int64)
+    pending, off = [], 0
+    for ln in np.asarray(tree["feed_pending_lens"], np.int64):
+        pending.append(flat[off:off + int(ln)].copy())
+        off += int(ln)
+    rng = np.random.default_rng()
+    rng.bit_generator.state = feed["rng_state"]
+    return engine, alive, pending, rng, int(feed["tick"]), \
+        int(feed["dirty_ticks"])
+
+
 def serve_trim_stream(graph: str = "ER", ticks: int = 20, batch: int = 256,
                       seed: int = 0, instrument: bool = False,
                       trace: str | None = None,
                       metrics_port: int | None = None,
                       slo_ms: float = 50.0, metrics_hold: float = 0.0,
-                      metrics_json: str | None = None):
+                      metrics_json: str | None = None,
+                      checkpoint_dir: str | None = None,
+                      checkpoint_every: int = 5,
+                      fault_seed: int | None = None,
+                      fault_rate: float = 0.05, retries: int = 3):
     """Drive a :class:`~repro.core.stream.StreamEngine` with a synthetic
     update feed: each tick deletes a batch of random live edges and
     re-inserts a previously deleted batch (re-insertions may hit the
@@ -116,7 +162,27 @@ def serve_trim_stream(graph: str = "ER", ticks: int = 20, batch: int = 256,
     sliding-window p99 against ``--slo-ms``, with a breach counter.
     Port 0 picks a free port; ``--metrics-hold`` keeps the endpoint up
     for N seconds after the feed finishes so a scraper can collect the
-    final state, and ``--metrics-json`` dumps the snapshot to a file."""
+    final state, and ``--metrics-json`` dumps the snapshot to a file.
+
+    Fault tolerance (DESIGN.md §14): ``--checkpoint-dir`` checkpoints
+    the engine *and* the feed state (live mask, pending queue, RNG
+    state) every ``--checkpoint-every`` ticks through the manifest
+    writer, resumes from the latest step on startup, and writes a final
+    checkpoint on completion or SIGTERM (which also drains the async
+    writer and stops the metrics server).  ``--fault-seed`` installs a
+    deterministic :class:`~repro.fault.FaultSchedule`; recovery is
+    tiered per fault point: ``mid-update-batch`` fires before any
+    engine-side mutation, so the tick is replayed from a host snapshot
+    (same RNG state — bit-identical); ``pre-dispatch``/``post-dispatch``
+    on the stream engine fire after host mirrors moved, so the engine is
+    restored from the latest checkpoint (or the feed cold-restarts from
+    tick 0 when none exists); a failed checkpoint *write* is skipped
+    with a warning — serving never stops for the disk.  All recoveries
+    are bounded by ``--retries`` consecutive attempts with exponential
+    backoff and counted in ``repro_recoveries{point,strategy}``.  With
+    no flags this path is bit-identical to the non-fault-aware loop
+    (same RNG draws, same dispatch sequence)."""
+    from .. import fault as flt
     from .. import obs
     from ..core.stream import plan_stream
     from ..graphs import generators
@@ -124,6 +190,21 @@ def serve_trim_stream(graph: str = "ER", ticks: int = 20, batch: int = 256,
     plane = server = slo = None
     prev_plane = None
     health = {"status": "warming", "graph": graph, "ticks_done": 0}
+    stop = threading.Event()
+    prev_sigterm = None
+    try:
+        prev_sigterm = signal.signal(
+            signal.SIGTERM, lambda _s, _f: stop.set())
+    except ValueError:          # not on the main thread (tests)
+        prev_sigterm = None
+    checkpointer = None
+    fault_plane = prev_fault = None
+    if fault_seed is not None:
+        fault_plane = flt.FaultPlane(
+            flt.FaultSchedule(fault_seed, rate=fault_rate))
+        prev_fault = flt.set_fault_plane(fault_plane)
+        print(f"[serve] fault injection armed: "
+              f"{fault_plane.schedule.describe()}")
     if metrics_port is not None:
         plane = obs.MetricsPlane()
         prev_plane = obs.set_plane(plane)
@@ -138,31 +219,118 @@ def serve_trim_stream(graph: str = "ER", ticks: int = 20, batch: int = 256,
     try:
         fn_name, kwargs = _STREAM_GRAPHS[graph]
         g = getattr(generators, fn_name)(**kwargs)
-        # headroom for many insert batches between compactions: every
-        # compact changes the base CSR shape and costs one retrace of the
-        # apply step
-        engine = plan_stream(g, capacity=max(4096, 16 * batch),
-                             instrument=instrument)
-        rng = np.random.default_rng(seed)
-        src, dst = engine.delta._src_np.copy(), engine.delta._dst_np.copy()
-        alive = np.ones(g.m, bool)
-        pending = []                 # deleted batches awaiting re-insertion
-        dirty_ticks = 0
+        capacity = max(4096, 16 * batch)
+        # the feed addresses edges by their position in the *generated*
+        # graph (not the engine's base CSR, which re-sorts on compaction)
+        # so a restarted process replays the identical update sequence
+        indptr_h, indices_h = g.to_numpy()
+        src = np.repeat(np.arange(g.n, dtype=np.int64), np.diff(indptr_h))
+        dst = indices_h.astype(np.int64)
+        engine = None
+        if checkpoint_dir is not None:
+            from ..train import checkpoint as _ckpt
+            checkpointer = _ckpt.AsyncCheckpointer(checkpoint_dir)
+            if _ckpt.latest_step(checkpoint_dir) is not None:
+                (engine, alive, pending, rng, tick,
+                 dirty_ticks) = _load_serve_state(checkpoint_dir)
+                health["ticks_done"] = tick
+                print(f"[serve] resumed from {checkpoint_dir} at tick "
+                      f"{tick}/{ticks}")
+        if engine is None:
+            # headroom for many insert batches between compactions: every
+            # compact changes the base CSR shape and costs one retrace of
+            # the apply step
+            engine = plan_stream(g, capacity=capacity,
+                                 instrument=instrument)
+            rng = np.random.default_rng(seed)
+            alive = np.ones(g.m, bool)
+            pending = []             # deleted batches awaiting re-insertion
+            dirty_ticks = 0
+            tick = 0
+        attempts = 0
+        last_saved = None
+        snap = None            # pre-tick host state for verbatim replay
+        recover = None         # fault point awaiting recovery
         with obs.recording() as rec:
-            for tick in range(ticks):
-                k = min(batch, int(alive.sum()))
-                ids = rng.choice(np.nonzero(alive)[0], k, replace=False)
-                alive[ids] = False
-                ins = pending.pop(0) if len(pending) >= 3 else None
-                n_upd = k + (0 if ins is None else len(ins))
-                t0 = time.perf_counter()
-                with obs.span("tick", cat="serve", tick=tick,
-                              updates=n_upd):
-                    res = engine.apply(
-                        deletions=(src[ids], dst[ids]),
-                        insertions=None if ins is None else
-                        (src[ins], dst[ins]))
-                    _ = int(res.rounds)  # host sync closes span honestly
+            while tick < ticks and not stop.is_set():
+                # recovery runs inside the try: a fault injected *during*
+                # recovery (e.g. the plan-time retrim of a restored
+                # engine) re-enters the same bounded-attempts accounting
+                # instead of crashing the loop
+                try:
+                    if recover == "mid-update-batch":
+                        # fired before any engine-side mutation: rewind
+                        # the feed and replay the tick (same RNG draws)
+                        rng.bit_generator.state = snap[0]
+                        alive = snap[1].copy()
+                        pending = [p.copy() for p in snap[2]]
+                        dirty_ticks = snap[3]
+                        recover = None
+                        flt.get_fault_plane().record_recovery(
+                            "mid-update-batch", "retry")
+                    elif recover is not None:
+                        point = recover
+                        if (checkpoint_dir is not None and
+                                _ckpt.latest_step(checkpoint_dir)
+                                is not None):
+                            if checkpointer is not None:
+                                try:
+                                    checkpointer.wait()
+                                except OSError:
+                                    pass
+                            (engine, alive, pending, rng, tick,
+                             dirty_ticks) = _load_serve_state(
+                                 checkpoint_dir)
+                            recover = None
+                            flt.get_fault_plane().record_recovery(
+                                point, "restore")
+                            print(f"[serve] fault at {point!r}: "
+                                  f"restored from checkpoint, tick "
+                                  f"{tick}")
+                        else:
+                            # no checkpoint yet: degrade to a cold
+                            # restart of the feed (deterministic, so
+                            # the stream replays identically)
+                            engine = plan_stream(g, capacity=capacity,
+                                                 instrument=instrument)
+                            rng = np.random.default_rng(seed)
+                            alive = np.ones(g.m, bool)
+                            pending = []
+                            dirty_ticks = 0
+                            tick = 0
+                            recover = None
+                            flt.get_fault_plane().record_recovery(
+                                point, "restart")
+                            print(f"[serve] fault at {point!r}: no "
+                                  f"checkpoint, cold restart from "
+                                  f"tick 0")
+                    # host snapshot: enough to replay this tick verbatim
+                    snap = (rng.bit_generator.state, alive.copy(),
+                            [p.copy() for p in pending], dirty_ticks)
+                    k = min(batch, int(alive.sum()))
+                    ids = rng.choice(np.nonzero(alive)[0], k,
+                                     replace=False)
+                    alive[ids] = False
+                    ins = pending.pop(0) if len(pending) >= 3 else None
+                    n_upd = k + (0 if ins is None else len(ins))
+                    t0 = time.perf_counter()
+                    with obs.span("tick", cat="serve", tick=tick,
+                                  updates=n_upd):
+                        res = engine.apply(
+                            deletions=(src[ids], dst[ids]),
+                            insertions=None if ins is None else
+                            (src[ins], dst[ins]))
+                        _ = int(res.rounds)  # host sync closes span
+                except (flt.DeviceFault, flt.IOFault) as e:
+                    attempts += 1
+                    health["status"] = "recovering"
+                    if attempts > retries:
+                        raise
+                    time.sleep(flt.backoff_delay(attempts - 1))
+                    if recover is None:
+                        recover = getattr(e, "point", "unknown")
+                    continue
+                attempts = 0
                 if slo is not None:
                     slo.observe(time.perf_counter() - t0)
                 if plane is not None:
@@ -174,9 +342,38 @@ def serve_trim_stream(graph: str = "ER", ticks: int = 20, batch: int = 256,
                     alive[ins] = True
                 pending.append(ids)
                 dirty_ticks += bool(res.dirty)
-                health["ticks_done"] = tick + 1
+                tick += 1
+                health["ticks_done"] = tick
                 health["status"] = "ok"
-            res = engine.retrim()
+                if (checkpoint_dir is not None and checkpoint_every > 0
+                        and tick % checkpoint_every == 0):
+                    try:
+                        _save_serve_ckpt(
+                            checkpoint_dir, engine, tick, alive=alive,
+                            pending=pending, rng=rng, tick=tick,
+                            dirty_ticks=dirty_ticks,
+                            checkpointer=checkpointer)
+                        last_saved = tick
+                    except OSError as e:
+                        flt.get_fault_plane().record_recovery(
+                            getattr(e, "point", "checkpoint-write"),
+                            "skip")
+                        print(f"[serve] checkpoint at tick {tick} "
+                              f"failed ({e}); continuing without it")
+            res = flt.call_with_retries(engine.retrim, retries=retries)
+        if checkpoint_dir is not None and tick != last_saved:
+            try:
+                _save_serve_ckpt(checkpoint_dir, engine, tick,
+                                 alive=alive, pending=pending, rng=rng,
+                                 tick=tick, dirty_ticks=dirty_ticks,
+                                 checkpointer=checkpointer)
+            except OSError as e:
+                print(f"[serve] final checkpoint failed ({e})")
+        if stop.is_set():
+            health["status"] = "draining"
+            print(f"[serve] SIGTERM: drained at tick {tick}/{ticks}, "
+                  f"final checkpoint "
+                  f"{'written' if checkpoint_dir else 'disabled'}")
 
         tick_spans = rec.select("tick", cat="serve")
         dispatches = rec.select("dispatch", cat="engine")
@@ -191,7 +388,8 @@ def serve_trim_stream(graph: str = "ER", ticks: int = 20, batch: int = 256,
         steady_s = sum(t.dur for t in steady)
         ups = (sum(t.attrs["updates"] for t in steady) / steady_s
                if steady_s else float("nan"))
-        print(f"[serve] trim-stream {graph} n={g.n} m={g.m}: {ticks} ticks "
+        print(f"[serve] trim-stream {graph} n={g.n} m={g.m}: "
+              f"{len(tick_spans)} ticks "
               f"({warm} compile, excluded), {n_updates} updates, "
               f"{ups:,.0f} updates/s steady-state, dirty ticks "
               f"{dirty_ticks}, trimmed {res.n_trimmed} "
@@ -215,15 +413,26 @@ def serve_trim_stream(graph: str = "ER", ticks: int = 20, batch: int = 256,
             with open(metrics_json, "w") as f:
                 json.dump(plane.snapshot(), f, indent=1)
             print(f"[serve]   metrics snapshot: {metrics_json}")
-        if server is not None and metrics_hold > 0:
+        if server is not None and metrics_hold > 0 and not stop.is_set():
             print(f"[serve]   holding /metrics for {metrics_hold:.0f}s")
-            time.sleep(metrics_hold)
+            t_end = time.monotonic() + metrics_hold
+            while time.monotonic() < t_end and not stop.is_set():
+                time.sleep(0.2)    # SIGTERM-interruptible hold
         return engine
     finally:
+        if checkpointer is not None:
+            try:
+                checkpointer.close()
+            except OSError as e:
+                print(f"[serve] checkpoint writer error at close: {e}")
         if server is not None:
             server.close()
         if prev_plane is not None:
             obs.set_plane(prev_plane)
+        if fault_plane is not None:
+            flt.set_fault_plane(prev_fault)
+        if prev_sigterm is not None:
+            signal.signal(signal.SIGTERM, prev_sigterm)
 
 
 def main():
@@ -255,6 +464,21 @@ def main():
     ap.add_argument("--metrics-json", metavar="PATH",
                     help="dump the final MetricsPlane snapshot as JSON "
                          "(with --metrics-port)")
+    ap.add_argument("--checkpoint-dir", metavar="DIR",
+                    help="checkpoint engine + feed state here and resume "
+                         "from the latest step on startup (trim-stream)")
+    ap.add_argument("--checkpoint-every", type=int, default=5,
+                    metavar="TICKS",
+                    help="ticks between checkpoints (with "
+                         "--checkpoint-dir; a final checkpoint is always "
+                         "written)")
+    ap.add_argument("--fault-seed", type=int, default=None, metavar="SEED",
+                    help="install a deterministic FaultSchedule with this "
+                         "seed (chaos testing; off by default)")
+    ap.add_argument("--fault-rate", type=float, default=0.05,
+                    help="per-arming fault probability for --fault-seed")
+    ap.add_argument("--retries", type=int, default=3,
+                    help="bound on consecutive recovery attempts per tick")
     args = ap.parse_args()
     if args.app == "trim-stream":
         serve_trim_stream(args.graph, ticks=args.ticks,
@@ -263,7 +487,12 @@ def main():
                           metrics_port=args.metrics_port,
                           slo_ms=args.slo_ms,
                           metrics_hold=args.metrics_hold,
-                          metrics_json=args.metrics_json)
+                          metrics_json=args.metrics_json,
+                          checkpoint_dir=args.checkpoint_dir,
+                          checkpoint_every=args.checkpoint_every,
+                          fault_seed=args.fault_seed,
+                          fault_rate=args.fault_rate,
+                          retries=args.retries)
         return
     if args.arch is None:
         ap.error("--arch is required for --app model")

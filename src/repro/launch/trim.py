@@ -51,25 +51,71 @@ def run_local(graph_name: str, method: str, workers: int,
 
 
 def run_scc(graph_name: str, method: str, backend: str = "dense",
-            reach_backend: str = "windowed"):
+            reach_backend: str = "windowed",
+            checkpoint_dir: str | None = None, checkpoint_every: int = 0,
+            retries: int = 3):
     """The paper's flagship application on the device-resident batched
     driver (DESIGN.md §8): per worklist generation one batched trim
-    dispatch + two batched reach dispatches, labels materialized once."""
+    dispatch + two batched reach dispatches, labels materialized once.
+
+    With ``--checkpoint-dir`` the driver saves its generation-level state
+    (labels, pending regions, label counter, stats) every
+    ``checkpoint_every`` generations through an async writer; a
+    :class:`~repro.fault.DeviceFault`/``IOFault`` mid-decomposition is
+    retried with exponential backoff, each retry resuming from the latest
+    saved generation rather than replaying the whole worklist."""
     import numpy as np
 
     from ..core.scc import scc_decompose
     from ..graphs import make
     g = make(graph_name)
-    t0 = time.time()
-    labels, stats = scc_decompose(g, trim_method=method,
-                                  trim_backend=backend,
-                                  reach_backend=reach_backend)
-    t_first = time.time() - t0
-    t0 = time.time()
-    labels, stats = scc_decompose(g, trim_method=method,
-                                  trim_backend=backend,
-                                  reach_backend=reach_backend)
-    t_steady = time.time() - t0   # jit caches are process-wide: warm pass
+    if checkpoint_dir is not None:
+        from .. import fault as flt
+        from ..train.checkpoint import AsyncCheckpointer
+        checkpointer = AsyncCheckpointer(checkpoint_dir)
+        t0 = time.time()
+        try:
+            att = 0
+            while True:
+                try:
+                    labels, stats = scc_decompose(
+                        g, trim_method=method, trim_backend=backend,
+                        reach_backend=reach_backend,
+                        checkpoint_dir=checkpoint_dir,
+                        checkpoint_every=checkpoint_every,
+                        checkpointer=checkpointer, resume=att > 0)
+                    break
+                except (flt.DeviceFault, flt.IOFault) as e:
+                    att += 1
+                    if att > retries:
+                        raise
+                    time.sleep(flt.backoff_delay(att - 1))
+                    try:
+                        checkpointer.wait()
+                    except OSError:
+                        pass
+                    flt.get_fault_plane().record_recovery(
+                        getattr(e, "point", "unknown"), "restore")
+                    print(f"[scc] fault at "
+                          f"{getattr(e, 'point', 'unknown')!r}: resuming "
+                          f"from latest checkpoint (attempt {att})")
+        finally:
+            try:
+                checkpointer.close()
+            except OSError as e:
+                print(f"[scc] checkpoint writer error at close: {e}")
+        t_first = t_steady = time.time() - t0
+    else:
+        t0 = time.time()
+        labels, stats = scc_decompose(g, trim_method=method,
+                                      trim_backend=backend,
+                                      reach_backend=reach_backend)
+        t_first = time.time() - t0
+        t0 = time.time()
+        labels, stats = scc_decompose(g, trim_method=method,
+                                      trim_backend=backend,
+                                      reach_backend=reach_backend)
+        t_steady = time.time() - t0   # jit caches are process-wide: warm
     print(f"[scc] {graph_name} n={g.n} m={g.m} trim={method}/{backend} "
           f"reach={reach_backend}: {len(np.unique(labels)):,} SCCs, "
           f"generations={stats['generations']} pivots={stats['pivots']} "
@@ -199,23 +245,49 @@ def main():
     ap.add_argument("--metrics-json", metavar="PATH",
                     help="collect MetricsPlane telemetry for the run and "
                          "dump the JSON snapshot to PATH (any --app)")
+    ap.add_argument("--checkpoint-dir", metavar="DIR",
+                    help="checkpoint the SCC driver's generation state "
+                         "here and resume across faults (--app scc)")
+    ap.add_argument("--checkpoint-every", type=int, default=5,
+                    metavar="GENS",
+                    help="generations between driver checkpoints (with "
+                         "--checkpoint-dir)")
+    ap.add_argument("--fault-seed", type=int, default=None, metavar="SEED",
+                    help="install a deterministic FaultSchedule with this "
+                         "seed (chaos testing; off by default)")
+    ap.add_argument("--fault-rate", type=float, default=0.05,
+                    help="per-arming fault probability for --fault-seed")
+    ap.add_argument("--retries", type=int, default=3,
+                    help="bound on resume-from-checkpoint attempts")
     args = ap.parse_args()
     if args.app == "scc" and args.backend == "sharded":
         ap.error("--app scc needs a batchable trim backend "
                  "(--backend dense or windowed); shard at the region level")
+    if args.checkpoint_dir and args.app != "scc":
+        ap.error("--checkpoint-dir applies to --app scc (for the serving "
+                 "loop use repro.launch.serve --checkpoint-dir)")
 
     import contextlib
 
     from .. import obs
 
+    if args.fault_seed is not None:
+        from .. import fault as flt
+        fault_scope = flt.injecting_faults(
+            flt.FaultSchedule(args.fault_seed, rate=args.fault_rate))
+    else:
+        fault_scope = contextlib.nullcontext(None)
     scope = (obs.collecting_metrics() if args.metrics_json
              else contextlib.nullcontext(None))
-    with scope as plane:
+    with fault_scope, scope as plane:
         if args.dryrun:
             run_dryrun(args.method)
         elif args.app == "scc":
             run_scc(args.graph, args.method, args.backend,
-                    args.reach_backend)
+                    args.reach_backend,
+                    checkpoint_dir=args.checkpoint_dir,
+                    checkpoint_every=args.checkpoint_every,
+                    retries=args.retries)
         elif args.app == "stream":
             run_stream(args.graph)
         elif args.app == "peel":

@@ -580,6 +580,12 @@ class MetricsServer:
 
         class Handler(http.server.BaseHTTPRequestHandler):
             def do_GET(self):                      # noqa: N802 (stdlib API)
+                from ..fault.plane import get_fault_plane
+                try:
+                    get_fault_plane().arm("metrics-server", path=self.path)
+                except OSError as e:               # injected IOFault
+                    self.send_error(503, f"injected fault: {e}")
+                    return
                 path = self.path.split("?", 1)[0]
                 if path == "/metrics":
                     body = plane_getter().to_openmetrics().encode()

@@ -13,6 +13,7 @@ latency behind the next train steps.
 """
 from __future__ import annotations
 
+import atexit
 import json
 import os
 import queue
@@ -91,6 +92,25 @@ def restore(ckpt_dir: str, like, step: int | None = None,
     return tree, manifest["step"], manifest["metadata"]
 
 
+def load_flat(ckpt_dir: str, step: int | None = None):
+    """Manifest-driven restore: every leaf the checkpoint recorded, as a
+    flat ``{name: np.ndarray}`` dict.  Unlike :func:`restore` it needs no
+    ``like`` pytree — the manifest *is* the schema — so callers that
+    reconstruct objects from the arrays (engine ``load_state``, the
+    FaultPlane's ``restore_engine``) read exactly what was written.
+    Returns ``(tree, step, metadata)``."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    tree = {name: np.load(os.path.join(path, info["file"]))
+            for name, info in manifest["leaves"].items()}
+    return tree, manifest["step"], manifest["metadata"]
+
+
 def prune(ckpt_dir: str, keep: int = 3):
     if not os.path.isdir(ckpt_dir):
         return
@@ -102,20 +122,30 @@ def prune(ckpt_dir: str, keep: int = 3):
 
 
 class AsyncCheckpointer:
-    """Background-thread checkpoint writer (host copy inline, IO async)."""
+    """Background-thread checkpoint writer (host copy inline, IO async).
+
+    The writer thread is a daemon, so without cleanup an in-flight write
+    could be dropped at interpreter exit; construction therefore
+    registers an ``atexit`` hook that flushes the queue and joins the
+    thread.  ``close()`` is idempotent and a surfaced write error is
+    cleared once raised (``wait()`` after a failed write does not raise
+    the same error twice)."""
 
     def __init__(self, ckpt_dir: str, keep: int = 3):
         self.ckpt_dir = ckpt_dir
         self.keep = keep
         self._q: queue.Queue = queue.Queue()
         self._err: Exception | None = None
+        self._closed = False
         self._thread = threading.Thread(target=self._worker, daemon=True)
         self._thread.start()
+        atexit.register(self.close)
 
     def _worker(self):
         while True:
             item = self._q.get()
             if item is None:
+                self._q.task_done()
                 return
             step, host_tree, metadata = item
             try:
@@ -127,16 +157,32 @@ class AsyncCheckpointer:
                 self._q.task_done()
 
     def save(self, step: int, tree, metadata: dict | None = None):
+        if self._closed:
+            raise RuntimeError("AsyncCheckpointer is closed")
         # host copy now (device buffers may be donated by the next step)
         host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
         self._q.put((step, host_tree, metadata))
 
-    def wait(self):
-        self._q.join()
+    def _raise_pending(self):
         if self._err:
-            raise self._err
+            err, self._err = self._err, None
+            raise err
+
+    def wait(self):
+        """Block until every enqueued write hit disk; surface (and clear)
+        the first write error."""
+        self._q.join()
+        self._raise_pending()
 
     def close(self):
-        self.wait()
-        self._q.put(None)
+        """Flush outstanding writes and join the worker thread.
+        Idempotent; registered with ``atexit`` so exit never drops an
+        in-flight checkpoint."""
+        if self._closed:
+            return
+        self._closed = True
+        atexit.unregister(self.close)
+        self._q.put(None)               # after existing items: drains all
+        self._q.join()
         self._thread.join()
+        self._raise_pending()

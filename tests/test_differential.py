@@ -172,6 +172,85 @@ def test_frontier_modes_bit_identical(name, engine):
                                                           fr, key)
 
 
+# -- the resume axis: checkpointed/restored cells sit in the same matrix -----
+#
+# Every engine grew a ``state_dict()/load_state()`` checkpoint protocol
+# (DESIGN.md §14).  The contract is the same as the frontier axis: a
+# restored engine is bit-identical to the original — same masks, same
+# counters, same accounting — and its outputs still match the one numpy
+# oracle.  Stream checkpoints mid-update-sequence (the path-dependent
+# AC-4 counters must be restored verbatim, never recomputed).
+
+def _resume_trim(g, d):
+    import repro.fault as flt
+    e = plan(g, method="ac6")
+    want = np.asarray(e.run().status)
+    flt.save_engine(d, e, 0)
+    r, *_ = flt.restore_engine(d)
+    assert r.dispatches == e.dispatches and r.traces == e.traces
+    got = np.asarray(r.run().status)
+    assert np.array_equal(got, want)
+    return got.astype(bool)
+
+
+def _resume_reach(g, d):
+    import repro.fault as flt
+    e = plan_reach(g)
+    seeds = np.arange(g.n) % 3 == 0
+    want = np.asarray(e.run(seeds).mask)
+    flt.save_engine(d, e, 0)
+    r, *_ = flt.restore_engine(d)
+    assert r.dispatches == e.dispatches
+    assert np.array_equal(np.asarray(r.run(seeds).mask), want)
+    return None                              # reach has no trim oracle
+
+
+def _resume_peel(g, d):
+    import repro.fault as flt
+    e = plan_peel(g)
+    res = e.run()
+    flt.save_engine(d, e, 0)
+    r, *_ = flt.restore_engine(d)
+    res2 = r.run()
+    assert np.array_equal(np.asarray(res2.coreness),
+                          np.asarray(res.coreness))
+    assert np.array_equal(np.asarray(res2.status), np.asarray(res.status))
+    return np.asarray(r.run(k=1).status).astype(bool)
+
+
+def _resume_stream(g, d):
+    import repro.fault as flt
+    e = plan_stream(g)
+    ip, ix = g.to_numpy()
+    src = np.repeat(np.arange(g.n), np.diff(ip))
+    if g.m:                                  # one committed update batch
+        e.apply(deletions=([src[0]], [ix[0]]))
+    flt.save_engine(d, e, 0)                 # checkpoint mid-sequence
+    r, *_ = flt.restore_engine(d)
+    if g.m > 1:                              # both engines continue
+        e.apply(deletions=([src[1]], [ix[1]]))
+        r.apply(deletions=([src[1]], [ix[1]]))
+    assert np.array_equal(np.asarray(r._state[0]), np.asarray(e._state[0]))
+    assert np.array_equal(np.asarray(r._state[1]), np.asarray(e._state[1]))
+    assert r.delta.n_tomb == e.delta.n_tomb
+    got = np.asarray(r.retrim().status).astype(bool)
+    assert np.array_equal(got, trim_oracle(*e.snapshot().to_numpy()))
+    return None                              # oracle asserted in-place
+
+
+RESUME_ENGINES = {"trim": _resume_trim, "reach": _resume_reach,
+                  "peel": _resume_peel, "stream": _resume_stream}
+
+
+@pytest.mark.parametrize("engine", sorted(RESUME_ENGINES))
+@pytest.mark.parametrize("name", ["self_loop", "long_chain",
+                                  "bridged_2cycles"])
+def test_resumed_cells_agree(name, engine, oracles, tmp_path):
+    got = RESUME_ENGINES[engine](FIXTURES[name], str(tmp_path / "ck"))
+    if got is not None:
+        assert np.array_equal(got, oracles[name]), (name, engine)
+
+
 def test_frontier_auto_matches_dense_property():
     """Randomized auto-vs-dense bit-identity (needs optional hypothesis;
     the deterministic fixture matrix above runs regardless)."""

@@ -1,0 +1,145 @@
+"""Property test: a StreamEngine driven through random insert/delete/
+compact sequences under a random seeded fault schedule — recovering from
+every fault by restore-from-checkpoint — ends bit-identical to the
+uninterrupted engine, on every generator family.
+
+The chaos harness (`_run_chaos_sequence`) is plain code so the
+deterministic smoke test exercises it even without the optional
+hypothesis dep; the randomized property rides on top (same split as
+test_differential.py's frontier property).
+"""
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro import fault as flt
+from repro.core import plan_stream, trim_oracle
+from repro.graphs import generators
+
+# tiny instances of every generator family (fixed sizes so the jitted
+# apply step traces a bounded set of shapes across the whole run)
+FAMILIES = {
+    "er": lambda seed: generators.erdos_renyi(16, 48, seed=seed,
+                                              simple=True),
+    "ba": lambda seed: generators.barabasi_albert(16, deg=2, seed=seed),
+    "rmat": lambda seed: generators.rmat(4, 48, seed=seed),
+    "chain": lambda seed: generators.chain(12),
+    "layered": lambda seed: generators.layered_dag(16, layers=4, deg=2,
+                                                   seed=seed),
+    "sink_heavy": lambda seed: generators.sink_heavy(16, 40, sink_frac=0.5,
+                                                     seed=seed),
+}
+
+# device-side points only: checkpoint-write faults need the launcher's
+# skip-and-continue tier, which tests/test_fault.py covers directly
+DEVICE_POINTS = ("pre-dispatch", "post-dispatch", "mid-update-batch")
+
+MAX_ATTEMPTS = 25
+
+
+def _run_chaos_sequence(family, seed, ops, fault_seed, fault_rate=0.3):
+    """Drive a reference engine (uninterrupted) and a chaos engine
+    (checkpoint before every op; every injected fault recovered by
+    restore-from-checkpoint + replay) through the same op sequence and
+    assert they end bit-identical."""
+    g = FAMILIES[family](seed % 7)
+    ref = plan_stream(g, capacity=8, load_factor=4.0)
+    chaos = plan_stream(g, capacity=8, load_factor=4.0)
+    rng = np.random.default_rng(seed)
+    n = g.n
+    with tempfile.TemporaryDirectory() as d:
+        for step, (op, k, j) in enumerate(ops):
+            # materialize the batch from the (shared) pre-op state
+            deletions = insertions = None
+            if op in ("delete", "mixed"):
+                src, dst = ref.delta._live_edges()
+                kk = min(k, src.size)
+                if kk:
+                    ids = rng.choice(src.size, kk, replace=False)
+                    deletions = (src[ids], dst[ids])
+            if op in ("insert", "mixed"):
+                insertions = (rng.integers(0, n, j), rng.integers(0, n, j))
+
+            def do(e):
+                if op == "compact":
+                    e.compact()
+                else:
+                    e.apply(deletions=deletions, insertions=insertions)
+
+            do(ref)
+            flt.save_engine(d, chaos, step)      # pre-op safe point
+            faults = 0
+            # max_faults bounds each step's storm: recovery itself
+            # dispatches (the restored engine's plan-time retrim), so an
+            # unbudgeted high rate could outlast any finite attempt cap
+            with flt.injecting_faults(flt.FaultSchedule(
+                    fault_seed, rate=fault_rate, points=DEVICE_POINTS,
+                    max_faults=MAX_ATTEMPTS - 5)):
+                need_restore = False
+                while True:
+                    try:
+                        if need_restore:
+                            # restore runs *inside* the try: a fault
+                            # injected during the plan-time retrim of
+                            # the restored engine re-enters recovery
+                            chaos, *_ = flt.restore_engine(d)
+                            need_restore = False
+                        do(chaos)
+                        break
+                    except flt.DeviceFault:
+                        faults += 1
+                        assert faults <= MAX_ATTEMPTS, \
+                            (family, step, "fault storm")
+                        need_restore = True
+            # after recovery the chaos engine is bit-identical to the
+            # uninterrupted one: persistent AC-4 state AND overlay
+            assert np.array_equal(np.asarray(chaos._state[0]),
+                                  np.asarray(ref._state[0])), (family, step)
+            assert np.array_equal(np.asarray(chaos._state[1]),
+                                  np.asarray(ref._state[1])), (family, step)
+            assert chaos.delta.n_tomb == ref.delta.n_tomb
+            assert chaos.delta.n_ins == ref.delta.n_ins
+            # host and device overlay views never diverge after recovery
+            assert np.array_equal(np.asarray(chaos.delta.tomb),
+                                  chaos.delta._tomb_np)
+            assert np.array_equal(np.asarray(chaos.delta.ins_alive),
+                                  chaos.delta._ins_alive_np)
+        got = np.asarray(chaos.retrim().status).astype(bool)
+        want_ref = np.asarray(ref.retrim().status).astype(bool)
+        assert np.array_equal(got, want_ref), family
+        # and both still equal the from-scratch numpy oracle
+        assert np.array_equal(got, trim_oracle(*ref.snapshot().to_numpy()))
+
+
+def test_chaos_smoke_deterministic():
+    """Hypothesis-free pass over every family with a fixed op sequence
+    and an aggressive schedule — keeps the harness exercised when the
+    optional dep is absent."""
+    ops = [("delete", 2, 1), ("insert", 1, 2), ("mixed", 2, 2),
+           ("compact", 0, 0), ("delete", 3, 1)]
+    for i, family in enumerate(sorted(FAMILIES)):
+        _run_chaos_sequence(family, seed=31 + i, ops=ops,
+                            fault_seed=7 + i, fault_rate=0.4)
+
+
+def test_chaos_recovery_bit_identical_property():
+    pytest.importorskip(
+        "hypothesis",
+        reason="property-based case needs the optional hypothesis dep "
+               "(pip install -e .[test]); the deterministic smoke above "
+               "covers every family regardless")
+    from hypothesis import given, settings, strategies as st
+
+    op_st = st.tuples(st.sampled_from(["delete", "insert", "mixed",
+                                       "compact"]),
+                      st.integers(1, 3), st.integers(1, 3))
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.sampled_from(sorted(FAMILIES)), st.integers(0, 2**31 - 1),
+           st.integers(0, 2**31 - 1), st.lists(op_st, min_size=1,
+                                               max_size=4))
+    def prop(family, seed, fault_seed, ops):
+        _run_chaos_sequence(family, seed, ops, fault_seed)
+
+    prop()
