@@ -1,0 +1,371 @@
+"""Mutation corpus: deliberately broken twins proving each checker fires.
+
+A static checker that has never caught anything is indistinguishable from
+one that cannot.  Every rule in the analysis plane therefore ships with
+at least one minimal mutant — a kernel with an overlapping index_map, a
+plan with a smuggled callback, a generator emitting int64 — and
+``python -m repro.analysis.check --mutants`` (run in CI next to
+``--strict``) exits nonzero unless **every** mutant is caught by exactly
+the checker named in its ``expect`` field.
+
+The mutant kernels reuse the real capture path (``pallas_call`` under
+``jax.eval_shape`` — nothing executes), so a behavior change in Pallas'
+BlockSpec semantics that silently blinded the detector would surface
+here as a missed mutant, not as a green CI run.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import numpy as np
+
+from .capture import capture_kernel
+from .catalog import KernelDecl
+from .findings import Finding
+
+# -- mutant Pallas kernels -----------------------------------------------------
+# Bodies are trivial copies: the race detector only reads grid/BlockSpec
+# geometry, and capture never runs them.
+
+
+def _copy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def _overlap_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def _broadcast_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def _oob_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def _partial_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def _carry_kernel(x_ref, o_ref, carry_ref):
+    o_ref[...] = x_ref[...] + carry_ref[0]
+
+
+def _rogue_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def _mutant_pallas(body, n: int, block: int, out_index_map,
+                   scratch: bool = False, out_n: int | None = None):
+    """A minimal 1-D blocked wrapper in the repo's kernel idiom, with the
+    output index_map (and optionally an oversized output) under mutation
+    control."""
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+    from jax.experimental.pallas import tpu as pltpu
+
+    def fn(x):
+        return pl.pallas_call(
+            body,
+            grid=(n // block,),
+            in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+            out_specs=pl.BlockSpec((block,), out_index_map),
+            out_shape=jax.ShapeDtypeStruct((out_n or n,), jnp.int32),
+            scratch_shapes=([pltpu.SMEM((1,), jnp.int32)] if scratch
+                            else ()),
+            interpret=True,
+        )(x)
+
+    return capture_kernel(fn, jax.ShapeDtypeStruct((n,), jnp.int32))
+
+
+@dataclass
+class MutantKernel:
+    name: str
+    expect: str  # checker that must fire
+    build: Callable[[], list]
+
+
+MUTANT_DECLARATIONS: dict[tuple[str, str], KernelDecl] = {
+    (__name__, "_overlap_kernel"): KernelDecl(),
+    (__name__, "_broadcast_kernel"): KernelDecl(),
+    (__name__, "_oob_kernel"): KernelDecl(),
+    (__name__, "_partial_kernel"): KernelDecl(),
+    (__name__, "_carry_kernel"): KernelDecl(),  # scratch but no seq axis
+    # _rogue_kernel deliberately absent: the unregistered-kernel mutant
+}
+
+MUTANT_KERNELS: tuple[MutantKernel, ...] = (
+    # programs 2i and 2i+1 both write block i
+    MutantKernel("overlapping-index-map", "write-race",
+                 lambda: _mutant_pallas(_overlap_kernel, 64, 16,
+                                        lambda i: (i // 2,))),
+    # every program writes block 0 — an undeclared revisit axis
+    MutantKernel("broadcast-write", "undeclared-sequential",
+                 lambda: _mutant_pallas(_broadcast_kernel, 64, 16,
+                                        lambda i: (0,))),
+    # shifted map walks one block past the end
+    MutantKernel("shifted-oob-write", "oob-write",
+                 lambda: _mutant_pallas(_oob_kernel, 64, 16,
+                                        lambda i: (i + 1,))),
+    # output has 4 blocks but the 2-program grid writes only 0 and 1
+    MutantKernel("half-covered-output", "uncovered-block",
+                 lambda: _mutant_pallas(_partial_kernel, 64, 32,
+                                        lambda i: (i,), out_n=128)),
+    # SMEM carry on a kernel whose declaration admits no sequential axis
+    MutantKernel("carry-no-sequential", "carry-without-sequential",
+                 lambda: _mutant_pallas(_carry_kernel, 64, 16,
+                                        lambda i: (i,), scratch=True)),
+    # body never registered in any declaration table
+    MutantKernel("unregistered-body", "unregistered-kernel",
+                 lambda: _mutant_pallas(_rogue_kernel, 64, 16,
+                                        lambda i: (i,))),
+)
+
+
+# -- mutant plans --------------------------------------------------------------
+
+@dataclass
+class MutantPlan:
+    name: str
+    expect: str
+    build: Callable[[bool, int], tuple]  # (instrument, max_rounds)
+    check: str = "purity"  # purity | instrument | host_dtypes
+
+    @property
+    def family(self) -> str:
+        return "mutant"
+
+    @property
+    def variant(self) -> str:
+        return self.name
+
+    # PlanEntry protocol for the purity checkers
+    name_fmt = property(lambda self: self.name)
+
+
+def _abstract(shape, dtype):
+    import jax
+    import jax.numpy as jnp
+    return jax.ShapeDtypeStruct(shape, getattr(jnp, dtype))
+
+
+def _build_callback_plan(instrument, max_rounds):
+    import jax
+    import jax.numpy as jnp
+
+    def fn(x):
+        def body(c):
+            # smuggled host round-trip inside the fixpoint body
+            y = jax.pure_callback(
+                lambda v: v, jax.ShapeDtypeStruct((8,), jnp.int32), c)
+            return y - 1
+        return jax.lax.while_loop(lambda c: c.sum() > 0, body, x)
+
+    return jax.jit(fn), (_abstract((8,), "int32"),)
+
+
+def _build_transfer_plan(instrument, max_rounds):
+    import jax
+
+    def fn(x):
+        def body(c):
+            c = jax.device_put(c, jax.devices()[0])  # per-round transfer
+            return c - 1
+        return jax.lax.while_loop(lambda c: c.sum() > 0, body, x)
+
+    return jax.jit(fn), (_abstract((8,), "int32"),)
+
+
+def _build_concretize_plan(instrument, max_rounds):
+    import jax
+
+    def fn(x):
+        def body(c):
+            return c - int(c.sum())  # device_get: concretizes a tracer
+        return jax.lax.while_loop(lambda c: c.sum() > 0, body, x)
+
+    return jax.jit(fn), (_abstract((8,), "int32"),)
+
+
+def _build_int64_plan(instrument, max_rounds):
+    import jax
+
+    def fn(x):
+        return x * 2
+
+    # a 64-bit host array crossing into the jitted plan
+    return jax.jit(fn), (_abstract((8,), "int64"),)
+
+
+def _build_leaky_instrument_plan(instrument, max_rounds):
+    import jax
+
+    def fn(x):
+        # BUG under test: max_rounds leaks into the un-instrumented jaxpr
+        return x + max_rounds
+
+    return jax.jit(fn), (_abstract((8,), "int32"),)
+
+
+def _build_statless_instrument_plan(instrument, max_rounds):
+    import jax
+
+    def fn(x):
+        # BUG under test: instrument=True threads no stat outputs
+        return x * 2
+
+    return jax.jit(fn), (_abstract((8,), "int32"),)
+
+
+MUTANT_PLANS: tuple[MutantPlan, ...] = (
+    MutantPlan("callback-in-while-body", "host-callback",
+               _build_callback_plan),
+    MutantPlan("transfer-in-while-body", "host-transfer-in-loop",
+               _build_transfer_plan),
+    MutantPlan("device-get-in-body", "trace-failure",
+               _build_concretize_plan),
+    MutantPlan("int64-host-arg", "host-wide-dtype",
+               _build_int64_plan, check="host_dtypes"),
+    MutantPlan("max-rounds-leak", "instrument-not-inert",
+               _build_leaky_instrument_plan, check="instrument"),
+    MutantPlan("instrument-without-stats", "instrument-missing-stats",
+               _build_statless_instrument_plan, check="instrument"),
+)
+
+
+# -- mutant retrace probes & generators ----------------------------------------
+
+class _FakeEngine:
+    def __init__(self, kwargs, signature):
+        self._kwargs = kwargs
+        self._signature = signature
+
+    def _plan_kwargs(self):
+        return dict(self._kwargs)
+
+    def plan_signature(self):
+        return self._signature
+
+
+def _nan_probe():
+    return _FakeEngine({"method": "ac4", "load_factor": float("nan")},
+                       "mutant[nan]")
+
+
+def _unhashable_probe():
+    return _FakeEngine({"method": "ac4", "window": [16]},
+                       "mutant[unhashable]")
+
+
+def _weak_type_probe():
+    return _FakeEngine({"method": "ac4", "window": np.int32(16)},
+                       "mutant[weak]")
+
+
+class _UnstableFactory:
+    """Each replan reports a different signature — a retrace storm."""
+
+    def __init__(self):
+        self.count = 0
+
+    def __call__(self):
+        self.count += 1
+        return _FakeEngine({"method": "ac4", "epoch": self.count},
+                           f"mutant[unstable-{self.count}]")
+
+
+@dataclass
+class MutantProbe:
+    name: str
+    expect: str
+    factory: Callable
+
+
+MUTANT_PROBES: tuple[MutantProbe, ...] = (
+    MutantProbe("nan-plan-kwarg", "nan-kwarg", _nan_probe),
+    MutantProbe("unhashable-plan-kwarg", "unhashable-plan-kwargs",
+                _unhashable_probe),
+    MutantProbe("numpy-scalar-kwarg", "non-canonical-kwarg",
+                _weak_type_probe),
+    MutantProbe("unstable-replan", "unstable-plan", _UnstableFactory()),
+)
+
+
+def _int64_generator():
+    from ..core.graph import CSRGraph
+    n = 64
+    src = np.arange(n - 1, dtype=np.int64)  # BUG under test
+    return CSRGraph.from_edges(n, src, src + 1)
+
+
+@dataclass
+class MutantGenerator:
+    name: str
+    expect: str
+    factory: Callable
+
+
+MUTANT_GENERATORS: tuple[MutantGenerator, ...] = (
+    MutantGenerator("int64-edge-arrays", "generator-int64",
+                    _int64_generator),
+)
+
+
+# -- harness -------------------------------------------------------------------
+
+def verify_mutants() -> list[dict]:
+    """Run every mutant through its checker.
+
+    Returns one record per mutant: ``{name, expect, caught, findings}``.
+    ``caught`` is True iff a finding with the expected checker name fired
+    *for that mutant's subject* — any mutant surviving its checker is a
+    hole in the analysis plane.
+    """
+    from . import purity, races, retrace
+    from .catalog import KERNEL_DECLARATIONS
+    results: list[dict] = []
+
+    def record(name, expect, findings):
+        caught = any(f.checker == expect for f in findings)
+        results.append({"name": name, "expect": expect, "caught": caught,
+                        "findings": findings})
+
+    decls = dict(KERNEL_DECLARATIONS)
+    decls.update(MUTANT_DECLARATIONS)
+    for mk in MUTANT_KERNELS:
+        findings: list[Finding] = []
+        try:
+            for cap in mk.build():
+                findings.extend(races.check_capture(
+                    f"mutant-kernel:{mk.name}", cap, decls))
+        except Exception as e:
+            findings.append(Finding("capture-failure", "error",
+                                    f"mutant-kernel:{mk.name}", str(e)))
+        record(mk.name, mk.expect, findings)
+
+    for mp in MUTANT_PLANS:
+        entry_like = type("E", (), {"name": f"mutant:{mp.name}",
+                                    "build": staticmethod(mp.build)})()
+        if mp.check == "purity":
+            findings, _ = purity.check_plan_purity([entry_like])
+        elif mp.check == "instrument":
+            findings, _ = purity.check_instrument_diff([entry_like])
+        else:
+            findings, _ = purity.check_host_dtypes([entry_like])
+        record(mp.name, mp.expect, findings)
+
+    for pr in MUTANT_PROBES:
+        findings, _ = retrace.check_retrace_risk(
+            probes=[(f"mutant:{pr.name}", pr.factory)])
+        record(pr.name, pr.expect, findings)
+
+    for mg in MUTANT_GENERATORS:
+        findings, _ = retrace.check_generator_dtypes(
+            registry={mg.name: (mg.factory, {})}, tiny={mg.name: {}})
+        record(mg.name, mg.expect, findings)
+
+    return results

@@ -1,0 +1,208 @@
+"""Jaxpr fixpoint-purity lint.
+
+Every plan in the catalog is lowered on abstract shapes through the
+shared ``launch.lowering`` cache and its closed jaxpr walked recursively
+(``pjit`` bodies, ``while`` cond/body, ``cond`` branches, ``scan``
+bodies).  Rules:
+
+* **host callbacks** (``pure_callback`` / ``io_callback`` /
+  ``debug_callback``) are rejected *anywhere* in a plan — a fixpoint
+  that phones home even once per dispatch breaks the compile-once
+  contract, and inside a ``while`` body it serializes every round on the
+  host (the sync the paper's algorithms exist to avoid).
+* **host transfers** (``device_put`` and friends) are rejected inside
+  ``while``/``scan`` bodies — per-round transfers, same story.
+* **wide dtypes**: no int64/uint64/float64 aval may appear anywhere
+  (silent promotion doubles the memory traffic of every O(n+m) pass).
+* **non-static shapes**: every aval dimension must be a concrete int —
+  a symbolic dimension means the plan cannot be compiled once.
+* plans whose tracing *raises* (e.g. a smuggled ``device_get`` forcing
+  concretization) are reported as ``trace-failure`` rather than crashing
+  the checker.
+
+The **instrument-diff pass** re-proves the registry claim
+(core/registry.py, core/stream.py) as a mechanical check: for every
+plan, ``instrument=False`` must produce a byte-identical jaxpr whatever
+``max_rounds`` capacity rides along (the stat buffers must compile out
+*entirely*), and ``instrument=True`` must add stat outputs.
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING
+
+from .findings import Finding
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from .catalog import PlanEntry
+
+CALLBACK_PRIMITIVES = frozenset({
+    "pure_callback", "io_callback", "debug_callback", "callback",
+    "python_callback", "host_callback_call", "outside_call",
+})
+TRANSFER_PRIMITIVES = frozenset({"device_put", "copy_to_host_async"})
+WIDE_DTYPES = frozenset({"int64", "uint64", "float64", "complex128"})
+LOOP_PRIMITIVES = frozenset({"while", "scan"})
+
+PLAN_MAX_ROUNDS = 64  # pow2 capacity used for the instrument variants
+
+
+def _subjaxprs(eqn):
+    """Yield (inner_jaxpr, enters_loop_body) for every jaxpr param."""
+    import jax.extend.core as jex_core
+    name = eqn.primitive.name
+    for v in eqn.params.values():
+        items = v if isinstance(v, (tuple, list)) else (v,)
+        for item in items:
+            inner = None
+            if isinstance(item, jex_core.ClosedJaxpr):
+                inner = item.jaxpr
+            elif isinstance(item, jex_core.Jaxpr):
+                inner = item
+            if inner is not None:
+                yield inner, name in LOOP_PRIMITIVES
+
+
+def _aval_findings(subject: str, aval, where: str) -> list[Finding]:
+    findings = []
+    dtype = getattr(aval, "dtype", None)
+    if dtype is not None and str(dtype) in WIDE_DTYPES:
+        findings.append(Finding(
+            "wide-dtype", "error", subject,
+            f"{where}: {dtype} value of shape {tuple(aval.shape)} — "
+            f"64-bit types double the traffic of every O(n+m) pass"))
+    shape = getattr(aval, "shape", ())
+    if not all(isinstance(d, int) for d in shape):
+        findings.append(Finding(
+            "non-static-shape", "error", subject,
+            f"{where}: non-static shape {shape}"))
+    return findings
+
+
+def _walk(subject: str, jaxpr, in_loop: bool,
+          findings: list[Finding], seen_avals: set) -> None:
+    for var in list(jaxpr.invars) + list(jaxpr.outvars):
+        aval = getattr(var, "aval", None)
+        if aval is not None and id(aval) not in seen_avals:
+            seen_avals.add(id(aval))
+            findings.extend(_aval_findings(subject, aval, "binder"))
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name in CALLBACK_PRIMITIVES:
+            cb = eqn.params.get("callback", "")
+            loc = "inside a loop body" if in_loop else "at top level"
+            findings.append(Finding(
+                "host-callback", "error", subject,
+                f"{name} {loc}" + (f" ({cb})" if cb else "")))
+        elif name in TRANSFER_PRIMITIVES and in_loop:
+            findings.append(Finding(
+                "host-transfer-in-loop", "error", subject,
+                f"{name} inside a while/scan body forces a per-round "
+                f"host sync"))
+        for var in eqn.outvars:
+            aval = getattr(var, "aval", None)
+            if aval is not None and id(aval) not in seen_avals:
+                seen_avals.add(id(aval))
+                findings.extend(_aval_findings(subject, aval, name))
+        for inner, enters_loop in _subjaxprs(eqn):
+            _walk(subject, inner, in_loop or enters_loop, findings,
+                  seen_avals)
+
+
+def lint_jaxpr(subject: str, closed) -> list[Finding]:
+    """Run the purity rules over one closed jaxpr."""
+    findings: list[Finding] = []
+    _walk(subject, closed.jaxpr, False, findings, set())
+    # Deduplicate identical findings (shared avals inside loop bodies are
+    # revisited once per carry slot).
+    out, seen = [], set()
+    for f in findings:
+        key = (f.checker, f.subject, f.message)
+        if key not in seen:
+            seen.add(key)
+            out.append(f)
+    return out
+
+
+def _trace(entry: "PlanEntry", instrument: bool, max_rounds: int):
+    from ..launch.lowering import trace_jaxpr
+    fn, args = entry.build(instrument, max_rounds)
+    return trace_jaxpr(fn, *args)
+
+
+def check_plan_purity(entries) -> tuple[list[Finding], int]:
+    """Purity-lint every plan at its un-instrumented configuration."""
+    findings: list[Finding] = []
+    subjects = 0
+    for entry in entries:
+        subject = f"plan:{entry.name}"
+        subjects += 1
+        try:
+            closed = _trace(entry, False, 0)
+        except Exception as e:
+            findings.append(Finding(
+                "trace-failure", "error", subject,
+                f"abstract lowering raised {type(e).__name__}: "
+                f"{str(e).splitlines()[0][:200]}"))
+            continue
+        findings.extend(lint_jaxpr(subject, closed))
+    return findings, subjects
+
+
+def check_host_dtypes(entries) -> tuple[list[Finding], int]:
+    """No 64-bit array may cross the host boundary into a jitted plan.
+
+    With x64 disabled jax silently *downcasts* at the boundary, so a
+    64-bit host array is pure waste (2x the host memory + a cast per
+    dispatch) — and with x64 enabled it would recompile every plan.
+    """
+    import jax
+    findings: list[Finding] = []
+    subjects = 0
+    for entry in entries:
+        subject = f"plan:{entry.name}"
+        subjects += 1
+        try:
+            _, args = entry.build(False, 0)
+        except Exception:
+            continue  # reported by check_plan_purity
+        for leaf in jax.tree_util.tree_leaves(args):
+            if str(getattr(leaf, "dtype", "")) in WIDE_DTYPES:
+                findings.append(Finding(
+                    "host-wide-dtype", "error", subject,
+                    f"argument of dtype {leaf.dtype} shape "
+                    f"{tuple(leaf.shape)} crosses the host boundary"))
+    return findings, subjects
+
+
+def check_instrument_diff(entries) -> tuple[list[Finding], int]:
+    """instrument=False must be max_rounds-inert and byte-identical;
+    instrument=True must actually add stat outputs."""
+    findings: list[Finding] = []
+    subjects = 0
+    for entry in entries:
+        subject = f"plan:{entry.name}"
+        subjects += 1
+        try:
+            base = _trace(entry, False, 0)
+            padded = _trace(entry, False, PLAN_MAX_ROUNDS)
+            instrumented = _trace(entry, True, PLAN_MAX_ROUNDS)
+        except Exception as e:
+            findings.append(Finding(
+                "trace-failure", "error", subject,
+                f"instrument-diff lowering raised {type(e).__name__}: "
+                f"{str(e).splitlines()[0][:200]}"))
+            continue
+        if str(base) != str(padded):
+            findings.append(Finding(
+                "instrument-not-inert", "error", subject,
+                f"instrument=False jaxpr differs between max_rounds=0 and "
+                f"max_rounds={PLAN_MAX_ROUNDS}: the stat capacity leaks "
+                f"into the un-instrumented plan"))
+        n_base = len(base.jaxpr.outvars)
+        n_inst = len(instrumented.jaxpr.outvars)
+        if n_inst <= n_base:
+            findings.append(Finding(
+                "instrument-missing-stats", "error", subject,
+                f"instrument=True produced {n_inst} outputs vs {n_base} "
+                f"un-instrumented — no stat buffers were threaded"))
+    return findings, subjects

@@ -1,0 +1,229 @@
+"""Pallas write-race detector.
+
+For each captured ``pallas_call`` we enumerate the grid concretely (the
+shape lattice in ``analysis.catalog`` keeps grids small) and evaluate
+every *output* BlockSpec ``index_map`` at every grid point.  The safety
+argument mirrors how Pallas TPU serializes grids: the last grid axis is
+the innermost sequential loop, so two programs may target the same output
+block only if the axes on which they differ are *declared sequential*
+(accumulation or carry axes, executed in order on one core).  Concretely,
+per output:
+
+* **revisit axes** — grid axes the index_map is constant in.  Every
+  revisit axis with extent > 1 means the same block is visited multiple
+  times; each such axis must appear in the kernel's declared sequential
+  set or we flag ``undeclared-sequential``.
+* **injectivity** — restricted to the non-revisit axes the map must be
+  injective; a collision means two programs that differ on a parallel
+  axis write the same block: ``write-race``, reported with the two
+  witness grid points.
+* **bounds / coverage** — every emitted block index must lie inside the
+  output's block grid (``oob-write``) and every block must be written by
+  some program (``uncovered-block``).
+* **carry rule** — a kernel requesting scratch memory carries state
+  across grid steps, which is only sound on a sequential axis: scratch
+  with an empty declared-sequential set is ``carry-without-sequential``.
+
+Declarations are keyed by the kernel *body* (module, qualname) — two
+kernels in this repo share the body name ``_scan_kernel``, so the module
+is part of the key.  A captured body with no declaration is itself an
+error (``unregistered-kernel``): the detector must never silently skip a
+new kernel.
+"""
+from __future__ import annotations
+
+import itertools
+import math
+from typing import TYPE_CHECKING
+
+from .capture import PallasCapture
+from .findings import Finding
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from .catalog import KernelDecl, KernelEntry
+
+# Hard guard against combinatorial blowup: the pinned lattice keeps every
+# grid tiny; anything bigger is a catalog bug, not a kernel bug.
+MAX_GRID_POINTS = 1_000_000
+
+
+def _block_count(dim: int, block: int | None) -> int:
+    if block is None:  # squeezed / unblocked dimension: a single block
+        return 1
+    return max(1, math.ceil(dim / block))
+
+
+def _eval_index_map(spec, point: tuple[int, ...]) -> tuple[int, ...]:
+    idx = spec.index_map(*point)
+    if not isinstance(idx, tuple):
+        idx = (idx,)
+    return tuple(int(i) for i in idx)
+
+
+def _revisit_axes(points: list[tuple[int, ...]],
+                  mapped: dict[tuple[int, ...], tuple[int, ...]],
+                  ndim: int) -> set[int]:
+    """Axes along which the index map is constant (same block revisited)."""
+    revisit: set[int] = set()
+    for axis in range(ndim):
+        groups: dict[tuple[int, ...], tuple[int, ...]] = {}
+        constant = True
+        for p in points:
+            key = p[:axis] + p[axis + 1:]
+            val = mapped[p]
+            prev = groups.setdefault(key, val)
+            if prev != val:
+                constant = False
+                break
+        if constant:
+            revisit.add(axis)
+    return revisit
+
+
+def _check_output(subject: str, out_idx: int, cap: PallasCapture,
+                  spec, out_shape, decl: "KernelDecl") -> list[Finding]:
+    findings: list[Finding] = []
+    grid = cap.grid
+    total = math.prod(grid) if grid else 1
+    if total > MAX_GRID_POINTS:
+        return [Finding("grid-too-large", "error", subject,
+                        f"grid {grid} has {total} points; shrink the "
+                        f"lattice point (cap {MAX_GRID_POINTS})")]
+
+    block_shape = tuple(getattr(spec, "block_shape", None) or ())
+    shape = tuple(out_shape.shape)
+    nblocks = tuple(_block_count(d, b) for d, b in
+                    itertools.zip_longest(shape, block_shape,
+                                          fillvalue=None)
+                    if d is not None)
+
+    points = [tuple(p) for p in itertools.product(*[range(g) for g in grid])]
+    mapped: dict[tuple[int, ...], tuple[int, ...]] = {}
+    for p in points:
+        try:
+            mapped[p] = _eval_index_map(spec, p)
+        except Exception as e:  # index_map not concretely evaluable
+            return [Finding("index-map-error", "error", subject,
+                            f"output {out_idx}: index_map({p}) raised "
+                            f"{type(e).__name__}: {e}")]
+
+    # Bounds: every emitted block index inside the output block grid.
+    for p, idx in mapped.items():
+        for d, (i, nb) in enumerate(zip(idx, nblocks)):
+            if not (0 <= i < nb):
+                findings.append(Finding(
+                    "oob-write", "error", subject,
+                    f"output {out_idx}: program {p} writes block {idx}, "
+                    f"dim {d} outside [0, {nb})"))
+                return findings  # one witness is enough
+
+    revisit = _revisit_axes(points, mapped, len(grid))
+
+    # Revisit axes with extent > 1 must be declared sequential.
+    for axis in sorted(revisit):
+        if grid[axis] > 1 and axis not in decl.sequential_axes:
+            findings.append(Finding(
+                "undeclared-sequential", "error", subject,
+                f"output {out_idx}: grid axis {axis} (extent {grid[axis]}) "
+                f"revisits the same block but is not declared sequential "
+                f"(declared: {sorted(decl.sequential_axes)})"))
+
+    # Injectivity on the parallel (non-revisit) projection: the map is
+    # constant on revisit axes, so each parallel program owns exactly one
+    # block index; two programs claiming the same block is a race.
+    parallel_axes = [a for a in range(len(grid)) if a not in revisit]
+    block_owner: dict[tuple[int, ...], tuple[int, ...]] = {}
+    for p in points:
+        proj = tuple(p[a] for a in parallel_axes)
+        idx = mapped[p]
+        owner = block_owner.setdefault(idx, proj)
+        if owner != proj:
+            findings.append(Finding(
+                "write-race", "error", subject,
+                f"output {out_idx}: parallel programs {owner} and {proj} "
+                f"(projection onto axes {parallel_axes}) both write block "
+                f"{idx}"))
+            return findings
+
+    # Coverage: every block of the output is written by some program.
+    written = set(mapped.values())
+    expected = set(itertools.product(*[range(nb) for nb in nblocks]))
+    missing = expected - written
+    if missing:
+        sample = sorted(missing)[:4]
+        findings.append(Finding(
+            "uncovered-block", "error", subject,
+            f"output {out_idx}: {len(missing)} of {len(expected)} blocks "
+            f"never written (e.g. {sample})"))
+    return findings
+
+
+def check_capture(subject: str, cap: PallasCapture,
+                  declarations: dict) -> list[Finding]:
+    """Run every race rule against one captured pallas_call."""
+    decl = declarations.get(cap.body_key)
+    if decl is None:
+        return [Finding(
+            "unregistered-kernel", "error", subject,
+            f"kernel body {cap.body_name} has no sequential-axis "
+            f"declaration; register it in analysis.catalog "
+            f"(KERNEL_DECLARATIONS)")]
+
+    findings: list[Finding] = []
+    if cap.has_carry and not decl.sequential_axes:
+        findings.append(Finding(
+            "carry-without-sequential", "error", subject,
+            f"kernel body {cap.body_name} requests scratch (cross-step "
+            f"carry) but declares no sequential grid axis"))
+
+    specs = cap.out_specs
+    shapes = cap.out_shapes
+    if len(specs) < len(shapes):
+        # Single spec broadcast over outputs is not used in this repo;
+        # treat a missing spec as whole-array (one block, written by all).
+        specs = specs + (None,) * (len(shapes) - len(specs))
+    for j, (spec, sh) in enumerate(zip(specs, shapes)):
+        if spec is None:
+            total = math.prod(cap.grid) if cap.grid else 1
+            if total > 1 and not decl.sequential_axes:
+                findings.append(Finding(
+                    "write-race", "error", subject,
+                    f"output {j}: no BlockSpec (whole-array write) with "
+                    f"{total} parallel programs"))
+            continue
+        findings.extend(_check_output(subject, j, cap, spec, sh, decl))
+    return findings
+
+
+def check_races(entries: "list[KernelEntry]",
+                declarations: dict) -> tuple[list[Finding], int]:
+    """Sweep the kernel catalog over its shape lattice.
+
+    Returns the findings plus the number of (entry × lattice point ×
+    capture) subjects actually examined, so the report can prove the
+    sweep was not silently empty.
+    """
+    findings: list[Finding] = []
+    subjects = 0
+    for entry in entries:
+        for point in entry.points:
+            label = ",".join(f"{k}={v}" for k, v in sorted(point.items()))
+            subject = f"kernel:{entry.name}[{label}]"
+            try:
+                captures = entry.build(point)
+            except Exception as e:
+                findings.append(Finding(
+                    "capture-failure", "error", subject,
+                    f"tracing the kernel wrapper failed: "
+                    f"{type(e).__name__}: {e}"))
+                continue
+            if not captures:
+                findings.append(Finding(
+                    "no-pallas-call", "error", subject,
+                    "wrapper made no pallas_call under capture"))
+                continue
+            for k, cap in enumerate(captures):
+                subjects += 1
+                sub = subject if len(captures) == 1 else f"{subject}#call{k}"
+                findings.extend(check_capture(sub, cap, declarations))
+    return findings, subjects

@@ -1,0 +1,194 @@
+"""Retrace-risk lint over plan kwargs + generator dtype lint.
+
+The engines are compile-once by construction *only if* their static
+configuration is stable: every ``_plan_kwargs()`` value doubles as a jit
+static argument / cache key (checkpoint round-trips rebuild engines from
+exactly these kwargs).  A kwarg that is unhashable, non-canonical (a
+numpy scalar instead of a python int — the weak_type leak), or ``NaN``
+(``NaN != NaN``, so every replan is a fresh cache entry) turns replans
+into retrace storms — exactly what ``obs.metrics`` flags at
+``RETRACE_STORM_THRESHOLD`` compiles per plan signature.  This lint
+catches the storm at analysis time instead of in production telemetry.
+
+The generator dtype lint backs the int32 edge-array contract
+(``graphs/generators.py``): it rebuilds each benchmark family at a tiny
+parameterization with ``CSRGraph.from_edges`` temporarily replaced by a
+recorder and rejects any 64-bit edge array whose graph would fit int32 —
+the arrays that would otherwise cross the host boundary into a jitted
+plan at double width.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from .findings import Finding
+
+CANONICAL_KWARG_TYPES = (bool, int, float, str, type(None))
+
+# Tiny parameterizations per benchmark family — structure-preserving,
+# milliseconds to build.  A family present in BENCHMARK_GRAPHS but not
+# here is itself a finding: every generator must be dtype-checked.
+TINY_GRAPH_PARAMS: dict[str, dict] = {
+    "ER": dict(n=256, m=1024, seed=1),
+    "BA": dict(n=128, deg=4, seed=1),
+    "RMAT": dict(n_log2=6, m=512, seed=1),
+    "chain": dict(n=64),
+    "layered": dict(n=256, layers=8, deg=2, seed=1),
+    "sink_heavy": dict(n=256, m=512, sink_frac=0.5, seed=1),
+}
+
+REPLANS = 4  # identical plans built per family for the stability check
+
+
+def _kwarg_findings(subject: str, kwargs: dict) -> list[Finding]:
+    from ..obs.metrics import RETRACE_STORM_THRESHOLD
+    findings: list[Finding] = []
+    try:
+        hash(tuple(sorted(kwargs.items())))
+    except TypeError as e:
+        findings.append(Finding(
+            "unhashable-plan-kwargs", "error", subject,
+            f"_plan_kwargs() is not hashable ({e}); it cannot key a jit "
+            f"cache or a checkpoint round-trip"))
+    for k, v in kwargs.items():
+        if not isinstance(v, CANONICAL_KWARG_TYPES):
+            findings.append(Finding(
+                "non-canonical-kwarg", "error", subject,
+                f"{k}={v!r} has type {type(v).__name__} — static plan "
+                f"kwargs must be canonical python scalars (a numpy/jax "
+                f"scalar is the weak_type leak: equal-looking plans get "
+                f"distinct trace signatures)"))
+        if isinstance(v, float) and math.isnan(v):
+            findings.append(Finding(
+                "nan-kwarg", "error", subject,
+                f"{k} is NaN; NaN != NaN makes every replan a fresh "
+                f"cache key — a retrace storm "
+                f"(RETRACE_STORM_THRESHOLD={RETRACE_STORM_THRESHOLD}) "
+                f"by construction"))
+    return findings
+
+
+def _tiny_graph():
+    from ..core.graph import CSRGraph
+    n = 8
+    src = np.arange(n - 1, dtype=np.int32)
+    return CSRGraph.from_edges(n, src, src + 1)
+
+
+def _engine_probes():
+    """(family, factory) pairs building one engine each on a tiny graph."""
+    from ..core.engine import plan
+    from ..core.peel import plan_peel
+    from ..core.reach import plan_reach
+    from ..core.stream import plan_stream
+    g = _tiny_graph()
+    return (
+        ("trim", lambda: plan(g, method="ac6", backend="dense", workers=2)),
+        ("trim-instrumented",
+         lambda: plan(g, method="ac4", backend="dense", instrument=True)),
+        ("reach", lambda: plan_reach(g)),
+        ("peel", lambda: plan_peel(g)),
+        ("stream", lambda: plan_stream(g)),
+    )
+
+
+def check_retrace_risk(probes=None) -> tuple[list[Finding], int]:
+    """Probe each engine family: canonical kwargs + replan stability.
+
+    ``probes`` (injection point for the mutation corpus) defaults to the
+    real engine families.
+    """
+    from ..obs.metrics import RETRACE_STORM_THRESHOLD
+    if probes is None:
+        probes = _engine_probes()
+    findings: list[Finding] = []
+    subjects = 0
+    for family, factory in probes:
+        subject = f"engine:{family}"
+        subjects += 1
+        try:
+            engines = [factory() for _ in range(REPLANS)]
+        except Exception as e:
+            findings.append(Finding(
+                "plan-failure", "error", subject,
+                f"building the engine raised {type(e).__name__}: {e}"))
+            continue
+        kwargs0 = engines[0]._plan_kwargs()
+        findings.extend(_kwarg_findings(subject, kwargs0))
+        sigs = {e.plan_signature() for e in engines}
+        try:
+            kwset = {tuple(sorted(e._plan_kwargs().items()))
+                     for e in engines}
+        except TypeError:
+            kwset = {0, 1}  # unhashable already reported; force distinct
+        if len(sigs) > 1 or len(kwset) > 1:
+            findings.append(Finding(
+                "unstable-plan", "error", subject,
+                f"{REPLANS} identical plans produced {len(sigs)} "
+                f"signatures / {len(kwset)} kwarg sets — replans would "
+                f"accumulate toward RETRACE_STORM_THRESHOLD="
+                f"{RETRACE_STORM_THRESHOLD}"))
+    return findings, subjects
+
+
+def check_generator_dtypes(registry=None,
+                           tiny=None) -> tuple[list[Finding], int]:
+    """Rebuild each benchmark family tiny; reject 64-bit edge arrays.
+
+    ``registry``/``tiny`` (injection points for the mutation corpus)
+    default to the real ``BENCHMARK_GRAPHS`` and ``TINY_GRAPH_PARAMS``.
+    """
+    from ..core.graph import CSRGraph
+    from ..graphs.generators import BENCHMARK_GRAPHS
+    if registry is None:
+        registry = BENCHMARK_GRAPHS
+    if tiny is None:
+        tiny = TINY_GRAPH_PARAMS
+    findings: list[Finding] = []
+    subjects = 0
+    for name in sorted(registry):
+        subject = f"generator:{name}"
+        subjects += 1
+        if name not in tiny:
+            findings.append(Finding(
+                "generator-unchecked", "error", subject,
+                f"benchmark family {name!r} has no tiny parameterization "
+                f"in analysis.retrace.TINY_GRAPH_PARAMS; add one so its "
+                f"edge dtypes are linted"))
+            continue
+        factory, _ = registry[name]
+        calls: list[tuple[int, str, str]] = []
+        orig = CSRGraph.from_edges
+
+        def recording(n, src, dst, _orig=orig, _calls=calls):
+            _calls.append((n, str(np.asarray(src).dtype),
+                           str(np.asarray(dst).dtype)))
+            return _orig(n, src, dst)
+
+        CSRGraph.from_edges = staticmethod(recording)
+        try:
+            factory(**tiny[name])
+        except Exception as e:
+            findings.append(Finding(
+                "generator-failure", "error", subject,
+                f"building the tiny graph raised {type(e).__name__}: {e}"))
+            continue
+        finally:
+            CSRGraph.from_edges = staticmethod(orig)
+        if not calls:
+            findings.append(Finding(
+                "generator-unchecked", "error", subject,
+                "factory built no CSRGraph through from_edges"))
+            continue
+        for n, sdt, ddt in calls:
+            fits = n <= np.iinfo(np.int32).max
+            for which, dt in (("src", sdt), ("dst", ddt)):
+                if fits and dt.endswith("64"):
+                    findings.append(Finding(
+                        "generator-int64", "error", subject,
+                        f"{which} edge array is {dt} for n={n} (fits "
+                        f"int32) — double the host-side edge memory on "
+                        f"every build"))
+    return findings, subjects

@@ -24,19 +24,30 @@ DEAD = np.int32(0)
 
 
 def check_edge_ids(n: int, src: np.ndarray, dst: np.ndarray):
-    """Validate an edge batch: int64 views, matching lengths, endpoints in
-    [0, n).  Out-of-range ids would silently corrupt counting-sort indptrs
+    """Validate an edge batch: matching lengths, endpoints in [0, n).
+    Out-of-range ids would silently corrupt counting-sort indptrs
     (negative ids wrap, ids >= n scatter past the last row), so every
-    construction/update path rejects them with the offending count."""
-    src = np.asarray(src, dtype=np.int64).reshape(-1)
-    dst = np.asarray(dst, dtype=np.int64).reshape(-1)
+    construction/update path rejects them with the offending count.
+
+    Returns canonical integer views — int32 whenever ``n`` fits (after
+    validation every id is < n, so the downcast is lossless), int64 only
+    for genuinely huge graphs.  Keeping edge lists narrow halves host-side
+    edge memory; ``repro.analysis`` lints the same contract at the
+    generator boundary."""
+    src = np.asarray(src).reshape(-1)
+    dst = np.asarray(dst).reshape(-1)
+    if not np.issubdtype(src.dtype, np.integer):
+        src = src.astype(np.int64)
+    if not np.issubdtype(dst.dtype, np.integer):
+        dst = dst.astype(np.int64)
     if src.shape != dst.shape:
         raise ValueError(f"src/dst length mismatch: {src.shape} vs "
                          f"{dst.shape}")
     bad = int(((src < 0) | (src >= n)).sum() + ((dst < 0) | (dst >= n)).sum())
     if bad:
         raise ValueError(f"{bad} edge endpoint(s) out of range [0, {n})")
-    return src, dst
+    dt = np.int32 if n <= np.iinfo(np.int32).max else np.int64
+    return src.astype(dt, copy=False), dst.astype(dt, copy=False)
 
 
 def _stable_counting_order(src: np.ndarray, n: int) -> np.ndarray:
@@ -416,7 +427,9 @@ class DeltaCSR:
         b = src.shape[0]
         eids = np.full(b, self.m_base, np.int64)
         slots = np.full(b, self.capacity, np.int64)
-        keys = src * max(self.n, 1) + dst
+        # key arithmetic needs the full int64 range (n * n overflows the
+        # int32 the validated batch arrives in)
+        keys = src.astype(np.int64) * max(self.n, 1) + dst
         lo = np.searchsorted(self._keys_sorted, keys, "left")
         hi = np.searchsorted(self._keys_sorted, keys, "right")
         # group the batch by key; within a group, claim untombed base

@@ -17,6 +17,16 @@ import numpy as np
 from ..core.graph import CSRGraph
 
 
+def edge_dtype(n: int) -> type:
+    """int32 when every vertex id fits, int64 otherwise — CSR storage is
+    int32 anyway (``CSRGraph.from_edges``), so building edge lists wider
+    than needed just doubles host-side memory on every generator family.
+    The analysis plane's generator lint
+    (``repro.analysis.retrace.check_generator_dtypes``) enforces this at
+    the ``from_edges`` boundary."""
+    return np.int32 if n <= np.iinfo(np.int32).max else np.int64
+
+
 def erdos_renyi(n: int, m: int, seed: int = 0,
                 simple: bool = False) -> CSRGraph:
     """``simple=True`` strips self-loops and duplicate arcs (so the graph
@@ -25,13 +35,16 @@ def erdos_renyi(n: int, m: int, seed: int = 0,
     benchmark turns it on so deletion batches can never target phantom
     duplicate instances."""
     rng = np.random.default_rng(seed)
-    src = rng.integers(0, n, m)
-    dst = rng.integers(0, n, m)
+    dt = edge_dtype(n)
+    src = rng.integers(0, n, m, dtype=dt)
+    dst = rng.integers(0, n, m, dtype=dt)
     if simple:
         keep = src != dst
         src, dst = src[keep], dst[keep]
         # first occurrence of each (u, v) key, original order preserved
-        _, first = np.unique(src * np.int64(n) + dst, return_index=True)
+        # (the key itself needs the full int64 range: n * n overflows int32)
+        _, first = np.unique(src.astype(np.int64) * n + dst,
+                             return_index=True)
         first.sort()
         src, dst = src[first], dst[first]
     return CSRGraph.from_edges(n, src, dst)
@@ -43,12 +56,13 @@ def barabasi_albert(n: int, deg: int = 8, seed: int = 0) -> CSRGraph:
     outgoing edges, so the whole graph unravels: 100% trimmable (paper
     Table 6, BA row) with α ~ O(n/deg) peeling chains."""
     rng = np.random.default_rng(seed)
+    dt = edge_dtype(n)
     # preallocated endpoint pool (list-backed rng.choice is O(n^2) overall)
-    pool = np.empty(2 * n * deg + n, dtype=np.int64)
+    pool = np.empty(2 * n * deg + n, dtype=dt)
     pool[0] = 0
     pool_size = 1
-    src = np.empty(n * deg, dtype=np.int64)
-    dst = np.empty(n * deg, dtype=np.int64)
+    src = np.empty(n * deg, dtype=dt)
+    dst = np.empty(n * deg, dtype=dt)
     e = 0
     for v in range(1, n):
         k = min(deg, v)
@@ -67,8 +81,9 @@ def rmat(n_log2: int, m: int, seed: int = 0,
     """R-MAT recursive generator (vectorized bit sampling)."""
     rng = np.random.default_rng(seed)
     n = 1 << n_log2
-    src = np.zeros(m, np.int64)
-    dst = np.zeros(m, np.int64)
+    dt = edge_dtype(n)
+    src = np.zeros(m, dt)
+    dst = np.zeros(m, dt)
     for bit in range(n_log2):
         r = rng.random(m)
         quad_b = (r >= a) & (r < a + b)
@@ -81,12 +96,15 @@ def rmat(n_log2: int, m: int, seed: int = 0,
 
 def chain(n: int) -> CSRGraph:
     """v0 -> v1 -> ... -> v_{n-1}: all trimmable, α = n (AC-3 worst case)."""
-    return CSRGraph.from_edges(n, np.arange(n - 1), np.arange(1, n))
+    dt = edge_dtype(n)
+    return CSRGraph.from_edges(n, np.arange(n - 1, dtype=dt),
+                               np.arange(1, n, dtype=dt))
 
 
 def cycle(n: int) -> CSRGraph:
     """Single n-cycle: nothing trimmable."""
-    return CSRGraph.from_edges(n, np.arange(n), (np.arange(n) + 1) % n)
+    ids = np.arange(n, dtype=edge_dtype(n))
+    return CSRGraph.from_edges(n, ids, (ids + 1) % n)
 
 
 def layered_dag(n: int, layers: int, deg: int = 4, seed: int = 0) -> CSRGraph:
@@ -96,11 +114,12 @@ def layered_dag(n: int, layers: int, deg: int = 4, seed: int = 0) -> CSRGraph:
     rng = np.random.default_rng(seed)
     per = max(n // layers, 1)
     n = per * layers
+    dt = edge_dtype(n)
     src, dst = [], []
     for layer in range(layers - 1):
         lo, hi = layer * per, (layer + 1) * per
-        s = rng.integers(lo, hi, per * deg)
-        d = rng.integers(hi, hi + per, per * deg)
+        s = rng.integers(lo, hi, per * deg, dtype=dt)
+        d = rng.integers(hi, hi + per, per * deg, dtype=dt)
         src.append(s)
         dst.append(d)
     return CSRGraph.from_edges(n, np.concatenate(src), np.concatenate(dst))
@@ -110,14 +129,15 @@ def sink_heavy(n: int, m: int, sink_frac: float = 0.5, seed: int = 0) -> CSRGrap
     """A strongly-cyclic core plus a large fringe of (recursive) sinks —
     high trimmable fraction with small α (wikitalk-like, paper Table 6)."""
     rng = np.random.default_rng(seed)
+    dt = edge_dtype(n)
     n_core = max(int(n * (1 - sink_frac)), 2)
     # core cycle guarantees the core survives trimming
-    core_src = np.arange(n_core)
-    core_dst = (np.arange(n_core) + 1) % n_core
+    core_src = np.arange(n_core, dtype=dt)
+    core_dst = (core_src + 1) % n_core
     # fringe edges: from anywhere to anywhere, but fringe vertices only get
     # out-edges with probability ~0.5 (leaving true sinks)
-    src = rng.integers(0, n, m)
-    dst = rng.integers(0, n, m)
+    src = rng.integers(0, n, m, dtype=dt)
+    dst = rng.integers(0, n, m, dtype=dt)
     keep = (src < n_core) | (rng.random(m) < 0.5)
     return CSRGraph.from_edges(
         n, np.concatenate([core_src, src[keep]]),

@@ -27,6 +27,19 @@ from .flash_attention import flash_attention as _fa
 from .segment_reduce import segment_sum_pallas as _ssp
 
 
+_PERF_FLAGS_WARNED = [False]
+
+
+def _warn_perf_flags_missing():
+    if not _PERF_FLAGS_WARNED[0]:
+        _PERF_FLAGS_WARNED[0] = True
+        import warnings
+        warnings.warn(
+            "repro.launch.perf_flags is unavailable; flash_attention "
+            "falls back to default score dtype / mask handling",
+            RuntimeWarning, stacklevel=3)
+
+
 def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
@@ -43,12 +56,19 @@ def flash_attention(q, k, v, *, causal=True, sm_scale=None,
                    interpret=not on_tpu(), **kw)
     try:
         from ..launch.perf_flags import FLAGS
+    except ImportError as e:
+        # Only the optional module itself may be absent (stripped
+        # deployments).  A real import error *inside* perf_flags used to
+        # be swallowed here too, silently dropping the bf16-scores /
+        # additive-mask flags — re-raise those.
+        if e.name != f"{__package__.rsplit('.', 1)[0]}.launch.perf_flags":
+            raise
+        _warn_perf_flags_missing()
+    else:
         import jax.numpy as jnp
         kw.setdefault("score_dtype",
                       jnp.bfloat16 if FLAGS.attn_bf16_scores else None)
         kw.setdefault("additive_mask", FLAGS.attn_additive_mask)
-    except ImportError:
-        pass
     return ref.attention_ref_chunked(q, k, v, causal=causal,
                                      sm_scale=sm_scale, **kw)
 

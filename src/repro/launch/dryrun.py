@@ -22,6 +22,7 @@ import traceback
 import jax
 
 from .. import configs
+from . import lowering
 from .cells import build_cell
 from .mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16, make_production_mesh,
                    n_devices)
@@ -77,12 +78,13 @@ def _compile_costs(arch_id, shape_name, mesh, multi_pod, n_layers=None,
     """Compile one variant, return (flops, bytes, coll_bytes) per device."""
     build = build_cell(arch_id, shape_name, mesh, multi_pod,
                        n_layers=n_layers, scan_unroll=scan_unroll)
-    with mesh:
-        compiled = jax.jit(
-            build.fn, in_shardings=build.in_shardings,
-            out_shardings=build.out_shardings,
-            donate_argnums=build.donate_argnums,
-        ).lower(*build.abstract_args).compile()
+    compiled = lowering.lower_and_compile(
+        build.fn, tuple(build.abstract_args),
+        key=("dryrun", arch_id, shape_name, multi_pod, n_layers,
+             scan_unroll),
+        in_shardings=build.in_shardings,
+        out_shardings=build.out_shardings,
+        donate_argnums=build.donate_argnums, mesh=mesh)
     cost = compiled.cost_analysis()
     coll = collective_bytes(compiled.as_text())
     return (float(cost.get("flops", 0.0)),

@@ -17,6 +17,8 @@ if "--dryrun" in __import__("sys").argv:
     PYTHONPATH=src python -m repro.launch.trim --app stream --graph BA
     # bucketed k-core peeling on the AC-4 counter substrate (PeelEngine):
     PYTHONPATH=src python -m repro.launch.trim --app peel --graph BA
+    # static analysis plane (race/purity/retrace lint; no graph runs):
+    PYTHONPATH=src python -m repro.launch.trim --app check --strict
 
 Serving goes through the compile-once engine: ``plan()`` once, then every
 ``run()`` reuses the cached transpose and compiled kernel — the first/steady
@@ -239,12 +241,19 @@ def main():
                     choices=("dense", "windowed", "sharded"))
     ap.add_argument("--dryrun", action="store_true")
     ap.add_argument("--app", default="trim", choices=("trim", "scc",
-                                                      "stream", "peel"))
+                                                      "stream", "peel",
+                                                      "check"))
+    ap.add_argument("--strict", action="store_true",
+                    help="fail on warnings as well as errors (--app check)")
+    ap.add_argument("--mutants", action="store_true",
+                    help="run the analysis mutation corpus instead of the "
+                         "real registry (--app check)")
     ap.add_argument("--reach-backend", default="windowed",
                     choices=("dense", "windowed"))
     ap.add_argument("--metrics-json", metavar="PATH",
                     help="collect MetricsPlane telemetry for the run and "
-                         "dump the JSON snapshot to PATH (any --app)")
+                         "dump the JSON snapshot to PATH (any --app; for "
+                         "--app check this is the findings JSON)")
     ap.add_argument("--checkpoint-dir", metavar="DIR",
                     help="checkpoint the SCC driver's generation state "
                          "here and resume across faults (--app scc)")
@@ -260,6 +269,24 @@ def main():
     ap.add_argument("--retries", type=int, default=3,
                     help="bound on resume-from-checkpoint attempts")
     args = ap.parse_args()
+    if args.app == "check":
+        # the static-analysis plane: no graph, no engines, no device work —
+        # delegate to the repro.analysis.check CLI (shared lowering cache
+        # means a later --dryrun in the same process reuses its jaxprs)
+        if args.fault_seed is not None or args.checkpoint_dir:
+            ap.error("--app check is static analysis; fault injection and "
+                     "checkpoints don't apply")
+        from ..analysis.check import main as check_main
+        argv = []
+        if args.strict:
+            argv.append("--strict")
+        if args.mutants:
+            argv.append("--mutants")
+        if args.metrics_json:
+            argv += ["--json", args.metrics_json]
+        raise SystemExit(check_main(argv))
+    if args.strict or args.mutants:
+        ap.error("--strict/--mutants apply to --app check")
     if args.app == "scc" and args.backend == "sharded":
         ap.error("--app scc needs a batchable trim backend "
                  "(--backend dense or windowed); shard at the region level")

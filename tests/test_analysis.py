@@ -1,0 +1,233 @@
+"""The static-analysis plane (DESIGN.md §15).
+
+Two halves, mirroring the CI gate:
+
+* the **real** kernel/plan/generator registries must come back clean
+  under every checker (``check --strict`` semantics);
+* every **mutant** in the corpus must be caught by exactly the checker
+  named in its ``expect`` field — a missed mutant is a blind spot.
+
+Plus unit cells for the findings model, the shared lowering cache, and
+the ``launch/trim.py --app check`` wiring.
+"""
+import json
+
+import pytest
+
+from repro.analysis import mutants as mut
+from repro.analysis.capture import capture_kernel, captured_calls
+from repro.analysis.findings import Finding, Report
+
+
+# -- real registries are clean -------------------------------------------------
+
+@pytest.fixture(scope="module")
+def registry_report():
+    from repro.analysis.check import run_registry_checks
+    return run_registry_checks()
+
+
+CHECKERS = ("races", "purity", "host-dtypes", "instrument-diff",
+            "retrace", "generator-dtypes")
+
+
+@pytest.mark.parametrize("checker", CHECKERS)
+def test_registry_clean(registry_report, checker):
+    assert registry_report.subjects_checked[checker] > 0
+    bad = [f for f in registry_report.findings
+           if f.severity in ("error", "warning")]
+    assert not bad, "\n".join(f.render() for f in bad)
+
+
+def test_registry_coverage(registry_report):
+    """The shape lattice actually sweeps the registry: every kernel family
+    and every plan family shows up as a checked subject."""
+    n = registry_report.subjects_checked
+    assert n["races"] >= 9      # one per KERNEL_CATALOG entry
+    assert n["purity"] >= 23    # one per PLAN_CATALOG entry
+    assert n["purity"] == n["host-dtypes"] == n["instrument-diff"]
+    assert n["retrace"] >= 5    # trim/trim-instrumented/reach/peel/stream
+    assert n["generator-dtypes"] >= 6
+
+
+def test_registry_strict_ok(registry_report):
+    assert registry_report.ok(strict=True)
+
+
+# -- every mutant is caught ----------------------------------------------------
+
+@pytest.fixture(scope="module")
+def mutant_results():
+    return {r["name"]: r for r in mut.verify_mutants()}
+
+
+ALL_MUTANTS = tuple(
+    (m.name, m.expect)
+    for group in (mut.MUTANT_KERNELS, mut.MUTANT_PLANS, mut.MUTANT_PROBES,
+                  mut.MUTANT_GENERATORS)
+    for m in group)
+
+
+def test_mutant_corpus_spans_checkers():
+    """The corpus exercises every rule family at least once."""
+    expects = {e for _, e in ALL_MUTANTS}
+    assert {"write-race", "undeclared-sequential", "oob-write",
+            "uncovered-block", "carry-without-sequential",
+            "unregistered-kernel", "host-callback",
+            "host-transfer-in-loop", "trace-failure", "host-wide-dtype",
+            "instrument-not-inert", "instrument-missing-stats",
+            "nan-kwarg", "unhashable-plan-kwargs", "non-canonical-kwarg",
+            "unstable-plan", "generator-int64"} <= expects
+
+
+@pytest.mark.parametrize("name,expect", ALL_MUTANTS)
+def test_mutant_caught(mutant_results, name, expect):
+    r = mutant_results[name]
+    fired = sorted({f.checker for f in r["findings"]})
+    assert r["caught"], (f"mutant {name!r}: expected checker {expect!r} "
+                         f"did not fire (fired: {fired or ['none']})")
+
+
+def test_mutant_cli_gate(tmp_path, capsys):
+    from repro.analysis.check import main
+    out = tmp_path / "mutants.json"
+    assert main(["--mutants", "--json", str(out)]) == 0
+    assert "OK" in capsys.readouterr().out
+    payload = json.loads(out.read_text())
+    assert payload["counts"]["error"] == 0
+    assert payload["subjects_checked"]["mutants"] == len(ALL_MUTANTS)
+
+
+# -- findings model ------------------------------------------------------------
+
+def test_finding_rejects_bad_severity():
+    with pytest.raises(ValueError):
+        Finding("x", "fatal", "s", "m")
+
+
+def test_report_strictness():
+    r = Report()
+    r.extend([Finding("c", "warning", "s", "m")])
+    assert r.ok(strict=False)
+    assert not r.ok(strict=True)
+    r.extend([Finding("c", "error", "s", "m")])
+    assert not r.ok(strict=False)
+
+
+def test_report_json_roundtrip(tmp_path):
+    r = Report()
+    r.note_subjects("races", 3)
+    r.extend([Finding("write-race", "error", "k", "two programs")])
+    p = tmp_path / "f.json"
+    r.dump_json(str(p))
+    payload = json.loads(p.read_text())
+    assert payload["version"] == 1
+    assert payload["counts"]["error"] == 1
+    assert payload["findings"][0]["checker"] == "write-race"
+
+
+# -- capture + shared lowering cache -------------------------------------------
+
+def test_capture_records_real_kernel():
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.counter_scatter import counter_scatter_pallas
+    caps = capture_kernel(
+        counter_scatter_pallas,
+        jax.ShapeDtypeStruct((64,), jnp.int32),
+        jax.ShapeDtypeStruct((64,), jnp.bool_),
+        jax.ShapeDtypeStruct((32,), jnp.int32),
+        jax.ShapeDtypeStruct((32,), jnp.int32),
+        block_v=16, block_u=8)
+    assert len(caps) == 1
+    cap = caps[0]
+    assert cap.body_key[0] == "repro.kernels.counter_scatter"
+    assert len(cap.grid) == 2
+    assert cap.out_shapes
+
+
+def test_capture_is_abstract():
+    """Nothing executes under capture — a poisoned body never runs."""
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    def bomb(x_ref, o_ref):  # pragma: no cover - must never execute
+        raise AssertionError("kernel body executed during capture")
+
+    def fn(x):
+        return pl.pallas_call(
+            bomb, grid=(4,),
+            in_specs=[pl.BlockSpec((16,), lambda i: (i,))],
+            out_specs=pl.BlockSpec((16,), lambda i: (i,)),
+            out_shape=jax.ShapeDtypeStruct((64,), jnp.int32),
+            interpret=True)(x)
+
+    caps = capture_kernel(fn, jax.ShapeDtypeStruct((64,), jnp.int32))
+    assert caps[0].body_name.endswith("bomb")
+
+
+def test_captured_calls_restores_pallas():
+    from jax.experimental import pallas as pl
+    orig = pl.pallas_call
+    with captured_calls():
+        assert pl.pallas_call is not orig
+    assert pl.pallas_call is orig
+
+
+def test_lowering_cache_hits_on_identity():
+    import jax
+    import jax.numpy as jnp
+    from repro.launch import lowering
+
+    def f(x):
+        return x + 1
+
+    sds = jax.ShapeDtypeStruct((8,), jnp.int32)
+    before = lowering.cache_stats()
+    j1 = lowering.trace_jaxpr(f, sds)
+    j2 = lowering.trace_jaxpr(f, sds)
+    after = lowering.cache_stats()
+    assert j1 is j2
+    assert after["jaxpr_hits"] == before["jaxpr_hits"] + 1
+    assert after["jaxpr_misses"] == before["jaxpr_misses"] + 1
+
+
+# -- launch wiring -------------------------------------------------------------
+
+def test_trim_app_check_rejects_fault_flags(monkeypatch, capsys):
+    from repro.launch import trim
+    monkeypatch.setattr("sys.argv", ["trim", "--app", "check",
+                                     "--fault-seed", "1"])
+    with pytest.raises(SystemExit) as e:
+        trim.main()
+    assert e.value.code == 2
+    assert "static analysis" in capsys.readouterr().err
+
+
+def test_trim_strict_requires_app_check(monkeypatch, capsys):
+    from repro.launch import trim
+    monkeypatch.setattr("sys.argv", ["trim", "--strict"])
+    with pytest.raises(SystemExit) as e:
+        trim.main()
+    assert e.value.code == 2
+    assert "--app check" in capsys.readouterr().err
+
+
+def test_trim_app_check_dispatches(monkeypatch):
+    """--app check forwards to the analysis CLI (stubbed: no full run)."""
+    from repro.launch import trim
+    seen = {}
+
+    def fake_main(argv):
+        seen["argv"] = argv
+        return 0
+
+    import repro.analysis.check as check_mod
+    monkeypatch.setattr(check_mod, "main", fake_main)
+    monkeypatch.setattr("sys.argv", ["trim", "--app", "check", "--strict",
+                                     "--metrics-json", "/tmp/f.json"])
+    with pytest.raises(SystemExit) as e:
+        trim.main()
+    assert e.value.code == 0
+    assert seen["argv"] == ["--strict", "--json", "/tmp/f.json"]
